@@ -1,0 +1,120 @@
+"""Per-cell dry-run profiler: lowers one (arch × shape × mesh) cell and
+prints the top dot and collective contributors with their while-loop
+multiplicities — the §Perf "profile" used for hypothesis forming.
+
+  PYTHONPATH=src python -m benchmarks.profile_cell --arch qwen3-moe-235b-a22b \
+      --shape train_4k --mesh single --top 12
+"""
+
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import re
+
+import jax
+
+from repro.launch.dryrun import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.distributed.context import bind_axes
+from repro.distributed.sharding import dp_axes_of
+from repro.launch import hlo_analysis as H
+
+
+def comp_constants(txt):
+    comp_consts, cur = {}, None
+    for raw in txt.splitlines():
+        line = raw.strip()
+        m = re.match(r"^(ENTRY\s+)?(%?[\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$",
+                     line)
+        if m and "=" not in line.split("(")[0]:
+            cur = m.group(2)
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur:
+            cm = re.search(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)", line)
+            if cm:
+                comp_consts.setdefault(cur, []).append(int(cm.group(1)))
+    return comp_consts
+
+
+def profile(txt, top=12):
+    comps, entry = H._parse(txt)
+    consts = comp_constants(txt)
+
+    def cond_trip(cond):
+        vals, stack, seen = [], [cond], set()
+        while stack:
+            c = stack.pop()
+            if c in seen or c not in comps:
+                continue
+            seen.add(c)
+            vals.extend(consts.get(c, []))
+            for op in comps[c].ops:
+                for _, cal in H._called(op):
+                    stack.append(cal)
+        vals = [v for v in vals if 0 < v < 10_000_000]
+        return max(vals) if vals else 1
+
+    dots, colls = [], []
+
+    def visit(cname, mult):
+        comp = comps[cname]
+        for op in comp.ops:
+            if op.kind in ("dot", "dot-general"):
+                f = H._dot_flops(op, comp)
+                dots.append((f * mult, f, mult, op.sig[:48], cname[:48]))
+            base = op.kind.replace("-start", "")
+            if base in H._COLLECTIVES and not op.kind.endswith("-done"):
+                nb = H._bytes_of(op.sig)
+                colls.append((nb * mult, nb, mult, base, op.sig[:48],
+                              cname[:40]))
+            calls = H._called(op)
+            if op.kind == "while":
+                body = next((c for k, c in calls if k == "body"), None)
+                cond = next((c for k, c in calls if k == "condition"), None)
+                t = cond_trip(cond) if cond else 1
+                if body:
+                    visit(body, mult * t)
+            elif op.kind == "conditional":
+                brs = [c for k, c in calls if k == "branch"]
+                for b in brs[:1]:
+                    visit(b, mult)
+            elif op.kind in ("fusion", "call", "async-start"):
+                for k, cal in calls:
+                    if k == "calls" and cal in comps:
+                        visit(cal, mult)
+
+    visit(entry, 1)
+    dots.sort(reverse=True)
+    colls.sort(reverse=True)
+    print(f"== dots: total {sum(d[0] for d in dots):.3e} flops/dev ==")
+    for d in dots[:top]:
+        print(f"  {d[0]:.2e} = {d[1]:.2e} x{d[2]:5d}  {d[3]:48s} {d[4]}")
+    print(f"== collectives: total {sum(c[0] for c in colls):.3e} B/dev ==")
+    for c in colls[:top]:
+        print(f"  {c[0]:.2e} = {c[1]:.2e} x{c[2]:5d}  {c[3]:18s} {c[4]}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--radix", type=int, default=7)
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    fn, inputs, shardings, cfg, kw = build_cell(args.arch, args.shape,
+                                                radix=args.radix)
+    with mesh, bind_axes(dp=dp_axes_of(mesh), tp="model", mesh=mesh):
+        txt = jax.jit(fn, in_shardings=shardings(mesh), **kw) \
+            .lower(*inputs).compile().as_text()
+    profile(txt, args.top)
+
+
+if __name__ == "__main__":
+    main()

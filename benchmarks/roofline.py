@@ -1,0 +1,137 @@
+"""Roofline analysis from the dry-run artifacts.
+
+Per (arch × shape × mesh) cell:
+  compute term    = FLOPs_per_dev / peak  (bf16 197 TF/s; int dots at 394)
+  memory term     = HBM-bytes_per_dev / 819 GB/s
+  collective term = collective-bytes_per_dev / 45 GB/s link BW
+plus MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) and the useful-compute
+ratio MODEL_FLOPS / (HLO FLOPs × devices).
+
+All quantities come from the call-graph roll-up (hlo_analysis) of the
+compiled per-device module; the dominant term is the bottleneck the §Perf
+loop iterates on.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_BF16 = 197e12
+PEAK_INT8 = 394e12
+HBM_BW = 819e9
+LINK_BW = 4.5e10
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+# active params per arch (for MODEL_FLOPS): dense N; MoE: shared + top_k
+# experts + attention/embeddings
+_N_PARAMS = {
+    "seamless-m4t-large-v2": 1.4e9,       # 24+24L enc-dec + 256k vocab emb
+    "deepseek-v2-lite-16b": (15.7e9, 2.4e9),
+    "qwen3-moe-235b-a22b": (235e9, 22e9),
+    "mamba2-780m": 0.78e9,
+    "command-r-plus-104b": 104e9,
+    "nemotron-4-15b": 15e9,
+    "stablelm-1.6b": 1.6e9,
+    "qwen1.5-110b": 110e9,
+    "internvl2-76b": 76e9,
+    "hymba-1.5b": 1.5e9,
+}
+
+_SHAPE_TOKENS = {
+    "train_4k": 256 * 4096,
+    "prefill_32k": 32 * 32768,
+    "decode_32k": 128 * 1,
+    "long_500k": 1 * 1,
+}
+
+
+def model_flops(arch: str, shape: str) -> float:
+    n = _N_PARAMS.get(arch, 1e9)
+    n_active = n[1] if isinstance(n, tuple) else n
+    tokens = _SHAPE_TOKENS.get(shape, 1)
+    mult = 6 if shape.startswith("train") else 2  # fwd-only when serving
+    return mult * n_active * tokens
+
+
+def load_records(art_dir: str = ART_DIR, tag: str = "") -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("tag", "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def roofline_terms(rec: dict) -> Optional[dict]:
+    if not rec.get("ok"):
+        return None
+    fl = rec.get("flops", 0.0)
+    fi = rec.get("flops_int", 0.0)
+    n_dev = rec.get("n_devices", 1)
+    # int dots run at 2x peak on the MXU
+    t_compute = (fl - fi) / PEAK_BF16 + fi / PEAK_INT8
+    t_memory = rec.get("bytes_hbm", 0.0) / HBM_BW
+    t_coll = rec["collectives"]["total_bytes"] / LINK_BW
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_total = fl * n_dev
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    # ideal step time: the workload MUST do MODEL_FLOPS of math and MUST
+    # stream its resident state (params + caches + opt, = per-device jit
+    # argument bytes) through HBM at least once. The roofline fraction is
+    # ideal / achieved-bound — 1.0 means the step runs at the hardware
+    # limit of its intrinsic bottleneck.
+    t_ideal_compute = mf / n_dev / PEAK_BF16
+    arg_bytes = rec.get("mem", {}).get("argument_size_in_bytes", 0.0) or 0.0
+    t_ideal_mem = arg_bytes / HBM_BW
+    t_ideal = max(t_ideal_compute, t_ideal_mem)
+    t_bound = max(t_compute, t_memory, t_coll)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "radix": rec.get("radix"),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "hlo_flops_total": hlo_total,
+        "useful_ratio": (mf / hlo_total) if hlo_total else 0.0,
+        "t_ideal_s": t_ideal,
+        "roofline_frac": (t_ideal / t_bound) if t_bound > 0 else 0.0,
+    }
+
+
+def table(art_dir: str = ART_DIR, tag: str = "") -> List[dict]:
+    out = []
+    for rec in load_records(art_dir, tag):
+        t = roofline_terms(rec)
+        if t is not None:
+            out.append(t)
+    return out
+
+
+def render(rows: List[dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':6s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} "
+           f"{'dominant':>10s} {'useful':>7s} {'roofline':>9s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} "
+            f"{r['t_compute_s']:10.4f} {r['t_memory_s']:10.4f} "
+            f"{r['t_collective_s']:10.4f} {r['dominant']:>10s} "
+            f"{r['useful_ratio']:7.2f} {r['roofline_frac']:9.3f}")
+    return "\n".join(lines)
+
+
+def main():
+    rows = table()
+    print(render(rows))
+    print(f"\n{len(rows)} cells")
+
+
+if __name__ == "__main__":
+    main()

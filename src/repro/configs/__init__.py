@@ -1,0 +1,15 @@
+"""Architecture registry. Importing this package registers all assigned
+architectures plus the paper's own ResNet9."""
+
+from repro.configs.base import (ARCH_REGISTRY, SHAPES, ArchEntry, Shape,
+                                get_arch, input_specs, list_archs)
+
+# register everything
+from repro.configs import (seamless_m4t_large_v2, deepseek_v2_lite_16b,  # noqa
+                           qwen3_moe_235b_a22b, mamba2_780m,
+                           command_r_plus_104b, nemotron_4_15b,
+                           stablelm_1_6b, qwen1_5_110b, internvl2_76b,
+                           hymba_1_5b, resnet9_cifar10)
+
+__all__ = ["ARCH_REGISTRY", "SHAPES", "ArchEntry", "Shape", "get_arch",
+           "input_specs", "list_archs"]

@@ -1,0 +1,113 @@
+"""Config registry: architectures × input shapes.
+
+Each architecture registers a FULL config (the exact published dims — only
+ever compiled via the dry-run with ShapeDtypeStructs) and a SMOKE config
+(same family, reduced dims — runs a real forward/train step on CPU).
+
+Shapes (assigned set): ``train_4k`` lowers ``train_step``; ``prefill_32k``
+lowers the prefill; ``decode_*`` lower ``serve_step`` (one token against a
+seq_len KV cache). ``long_500k`` applies only to sub-quadratic archs
+(SSM/hybrid) — skips are recorded per arch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+__all__ = ["Shape", "SHAPES", "ArchEntry", "ARCH_REGISTRY", "register",
+           "get_arch", "list_archs", "input_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchEntry:
+    full: ModelConfig
+    smoke: ModelConfig
+    shapes: Tuple[str, ...]
+    skip_notes: Dict[str, str]
+    source: str
+
+
+ARCH_REGISTRY: Dict[str, ArchEntry] = {}
+
+
+def register(name: str, full: ModelConfig, smoke: ModelConfig,
+             shapes: Tuple[str, ...], source: str = "",
+             skip_notes: Optional[Dict[str, str]] = None) -> None:
+    ARCH_REGISTRY[name] = ArchEntry(full=full, smoke=smoke, shapes=shapes,
+                                    skip_notes=skip_notes or {},
+                                    source=source)
+
+
+def get_arch(name: str) -> ArchEntry:
+    if name not in ARCH_REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCH_REGISTRY)}")
+    return ARCH_REGISTRY[name]
+
+
+def list_archs():
+    return sorted(k for k in ARCH_REGISTRY if k != "resnet9-cifar10")
+
+
+STANDARD_SHAPES = ("train_4k", "prefill_32k", "decode_32k")
+ALL_SHAPES = STANDARD_SHAPES + ("long_500k",)
+FULL_ATTN_SKIP = {"long_500k": "pure full-attention arch: 512k dense decode "
+                               "is outside the operating envelope (quadratic "
+                               "attention); skipped per assignment spec"}
+
+
+def input_specs(cfg: ModelConfig, shape: Shape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a given shape —
+    weak-type-correct, shardable, no device allocation (dry-run contract).
+
+    For ``train``/``prefill`` kinds this is the data batch; ``decode`` token
+    inputs (the caches come from ``jax.eval_shape`` over ``init_caches``)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                 "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family in ("encdec", "audio"):
+            # encoder source: frame embeddings from the (stub) frontend
+            specs["src_embeds"] = jax.ShapeDtypeStruct(
+                (b, s, cfg.frontend_dim or cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s - cfg.frontend_len), i32)
+            specs["labels"] = jax.ShapeDtypeStruct((b, s - cfg.frontend_len), i32)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family in ("encdec", "audio"):
+            specs["src_embeds"] = jax.ShapeDtypeStruct(
+                (b, s, cfg.frontend_dim or cfg.d_model), jnp.bfloat16)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, min(s, 4096)), i32)
+        if cfg.family == "vlm":
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s - cfg.frontend_len), i32)
+        return specs
+    # decode: one new token; caches sized for seq_len built via eval_shape
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}

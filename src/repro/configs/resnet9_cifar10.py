@@ -1,0 +1,20 @@
+"""The paper's own evaluation model: ResNet9 plain-CNN on CIFAR10 (Tables
+2/3). Not part of the assigned LM pool — registered for the benchmarks and
+the end-to-end quantized-CNN example."""
+
+from repro.configs.base import register
+from repro.models.layers import QuantPolicy
+from repro.models.transformer import ModelConfig
+
+# ResNet9 is a CNN, not a transformer; we register a sentinel ModelConfig so
+# the registry is uniform — benchmarks/examples use repro.models.resnet and
+# repro.core.cost_model.RESNET9_CIFAR10 directly.
+SENTINEL = ModelConfig(
+    name="resnet9-cifar10", family="cnn",
+    n_layers=9, d_model=512, n_heads=1, n_kv_heads=1, head_dim=64,
+    d_ff=0, vocab_size=10,
+    policy=QuantPolicy(mode="serial", w_bits=2, a_bits=2),
+)
+
+register("resnet9-cifar10", SENTINEL, SENTINEL, (),
+         source="paper §4.1 (Tables 2/3)")

@@ -1,0 +1,234 @@
+"""Bit-transposed data structures (BARVINN §3.1.2) in JAX.
+
+A ``b``-bit integer tensor is stored as ``b`` *bit planes*: plane ``i`` holds
+bit ``i`` of every element (LSB first in this implementation; the FPGA stores
+MSB at the lowest address — the ordering is a pure relabeling and we keep the
+MSB-first convention only in the serialized on-disk/command-stream format
+emitted by :mod:`repro.core.codegen`).
+
+Planes are packed along the *lane* (reduction) axis into ``uint32`` words so
+that HBM traffic scales with the chosen precision ``b`` — the paper's memory
+contribution. The FPGA packs 64 lanes per word; on TPU we default to 128-lane
+blocks (MXU tile width) with 4×``uint32`` words per block.
+
+Everything here is pure ``jnp`` and usable under ``jit``; these utilities are
+the oracle-side counterpart of the Pallas kernel's in-VMEM unpacking.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "to_bitplanes",
+    "from_bitplanes",
+    "plane_coeffs",
+    "pack_bitplanes",
+    "unpack_bitplanes",
+    "to_digits",
+    "digit_coeffs",
+    "num_digits",
+    "bit_transpose",
+    "bit_untranspose",
+    "BitTransposed",
+    "packed_nbytes",
+]
+
+
+def _mask(bits: int) -> int:
+    return (1 << bits) - 1
+
+
+def to_bitplanes(x: jax.Array, bits: int) -> jax.Array:
+    """Decompose integers into ``bits`` {0,1} planes, LSB first.
+
+    Negative values are taken in ``bits``-wide two's complement, exactly as the
+    MVU's weight/activation RAMs store them.
+
+    Returns int8 array of shape ``(bits, *x.shape)``.
+    """
+    x = x.astype(jnp.int32)
+    u = jnp.bitwise_and(x, _mask(bits))
+    shifts = jnp.arange(bits, dtype=jnp.int32).reshape((bits,) + (1,) * x.ndim)
+    return jnp.bitwise_and(jnp.right_shift(u[None], shifts), 1).astype(jnp.int8)
+
+
+def plane_coeffs(bits: int, signed: bool) -> np.ndarray:
+    """Per-plane magnitudes: 2^i, with the MSB plane negated for signed
+    two's-complement operands (Algorithm 1's sign handling)."""
+    c = np.asarray([1 << i for i in range(bits)], dtype=np.int64)
+    if signed:
+        c[-1] = -c[-1]
+    return c
+
+
+def from_bitplanes(planes: jax.Array, signed: bool) -> jax.Array:
+    """Inverse of :func:`to_bitplanes`; ``planes`` is ``(bits, ...)``."""
+    bits = planes.shape[0]
+    c = jnp.asarray(plane_coeffs(bits, signed), dtype=jnp.int32)
+    c = c.reshape((bits,) + (1,) * (planes.ndim - 1))
+    return jnp.sum(planes.astype(jnp.int32) * c, axis=0)
+
+
+def pack_bitplanes(planes: jax.Array, axis: int = -1) -> jax.Array:
+    """Pack {0,1} planes into uint32 words along ``axis``.
+
+    ``axis`` length must be a multiple of 32 (use :func:`pad_to` upstream).
+    The word layout matches the FPGA's bit-transposed RAM word: lane ``t`` of
+    a 32-lane group lands in bit ``t`` of the word.
+    """
+    axis = axis % planes.ndim
+    n = planes.shape[axis]
+    if n % 32:
+        raise ValueError(f"pack axis length {n} not a multiple of 32")
+    x = jnp.moveaxis(planes, axis, -1).astype(jnp.uint32)
+    x = x.reshape(x.shape[:-1] + (n // 32, 32))
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    packed = jnp.sum(x * weights, axis=-1, dtype=jnp.uint32)
+    return jnp.moveaxis(packed, -1, axis)
+
+
+def unpack_bitplanes(packed: jax.Array, n: int, axis: int = -1) -> jax.Array:
+    """Inverse of :func:`pack_bitplanes`; returns int8 {0,1} of length ``n``."""
+    axis = axis % packed.ndim
+    x = jnp.moveaxis(packed, axis, -1)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = jnp.bitwise_and(
+        jnp.right_shift(x[..., None], shifts), jnp.uint32(1)
+    ).astype(jnp.int8)
+    bits = bits.reshape(bits.shape[:-2] + (x.shape[-1] * 32,))[..., :n]
+    return jnp.moveaxis(bits, -1, axis)
+
+
+def num_digits(bits: int, radix_bits: int, signed: bool) -> int:
+    """Number of radix-2^s digit planes for a ``bits``-wide operand.
+
+    Unsigned operands require ``radix_bits <= 7`` (digits must fit int8);
+    signed operands allow ``radix_bits <= 8`` because the top digit is taken
+    with an arithmetic shift (see DESIGN.md §2).
+    """
+    if radix_bits < 1:
+        raise ValueError("radix_bits must be >= 1")
+    if radix_bits == 8:
+        # radix-256 is only exact when the whole operand is one signed digit
+        # (low digits of a multi-digit radix-256 decomposition span [0,255]
+        # and overflow int8). Signed b<=8 degenerates to the identity digit.
+        if not (signed and bits <= 8):
+            raise ValueError("radix_bits=8 requires signed operands with bits<=8")
+        return 1
+    if radix_bits > 8:
+        raise ValueError("radix_bits must be <= 8")
+    return max(1, -(-bits // radix_bits))
+
+
+def to_digits(x: jax.Array, bits: int, radix_bits: int, signed: bool) -> jax.Array:
+    """Decompose integers into int8 digit planes, LSB digit first.
+
+    Low digits are unsigned ``[0, 2^s)``; the top digit is arithmetic-shifted
+    so it carries the sign. This is Algorithm 1 with the bit loop re-based to
+    radix ``2^s`` — the TPU-native serialization (DESIGN.md §2). For signed
+    ``bits <= radix_bits`` the decomposition is the identity (one MXU matmul).
+
+    Returns int8 array of shape ``(num_digits, *x.shape)``.
+    """
+    n = num_digits(bits, radix_bits, signed)
+    x = x.astype(jnp.int32)
+    if signed:
+        # sign-extend the b-bit two's complement value to int32 first
+        u = jnp.bitwise_and(x, _mask(bits))
+        x = u - jnp.left_shift(jnp.bitwise_and(jnp.right_shift(u, bits - 1), 1), bits)
+    else:
+        x = jnp.bitwise_and(x, _mask(bits))
+    digits = []
+    for j in range(n):
+        d = jnp.right_shift(x, j * radix_bits)  # arithmetic shift on int32
+        if j < n - 1:
+            d = jnp.bitwise_and(d, _mask(radix_bits))
+        digits.append(d)
+    return jnp.stack(digits).astype(jnp.int8)
+
+
+def digit_coeffs(bits: int, radix_bits: int, signed: bool) -> np.ndarray:
+    n = num_digits(bits, radix_bits, signed)
+    return np.asarray([1 << (j * radix_bits) for j in range(n)], dtype=np.int64)
+
+
+def from_digits(digits: jax.Array, bits: int, radix_bits: int, signed: bool) -> jax.Array:
+    c = jnp.asarray(digit_coeffs(bits, radix_bits, signed), dtype=jnp.int32)
+    c = c.reshape((digits.shape[0],) + (1,) * (digits.ndim - 1))
+    return jnp.sum(digits.astype(jnp.int32) * c, axis=0)
+
+
+def pad_to(x: jax.Array, multiple: int, axis: int = -1) -> jax.Array:
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BitTransposed:
+    """A tensor in BARVINN bit-transposed packed format.
+
+    ``packed`` has shape ``(bits, *leading, ceil(K/32))`` uint32 where ``K``
+    is the reduction (lane) axis length — weights pack their input-channel
+    axis, activations their channel axis (paper Fig. 3). ``shape`` is the
+    logical (unpadded) integer tensor shape with the lane axis last.
+    """
+
+    packed: jax.Array
+    bits: int
+    signed: bool
+    shape: tuple  # logical shape, lane axis last
+
+    def tree_flatten(self):
+        return (self.packed,), (self.bits, self.signed, tuple(self.shape))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        bits, signed, shape = aux
+        return cls(children[0], bits, signed, shape)
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.packed.shape)) * 4
+
+    def unpack(self) -> jax.Array:
+        planes = unpack_bitplanes(self.packed, self.shape[-1], axis=-1)
+        return from_bitplanes(planes, self.signed)
+
+    def digits(self, radix_bits: int) -> jax.Array:
+        """Assemble int8 digit planes from the packed bit planes (what the
+        Pallas kernel does in VMEM)."""
+        planes = unpack_bitplanes(self.packed, self.shape[-1], axis=-1)
+        vals = from_bitplanes(planes, self.signed)
+        return to_digits(vals, self.bits, radix_bits, self.signed)
+
+
+def bit_transpose(x: jax.Array, bits: int, signed: bool) -> BitTransposed:
+    """Host-side transposer module (paper §3.1.2): integer tensor → packed
+    bit-transposed format, lane axis last."""
+    planes = to_bitplanes(x, bits)
+    planes = pad_to(planes, 32, axis=-1)
+    return BitTransposed(pack_bitplanes(planes, axis=-1), bits, signed, tuple(x.shape))
+
+
+def bit_untranspose(bt: BitTransposed) -> jax.Array:
+    return bt.unpack()
+
+
+def packed_nbytes(shape: Sequence[int], bits: int) -> int:
+    """Bytes of the packed representation for a logical shape (lane axis last)."""
+    lead = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+    words = -(-shape[-1] // 32)
+    return bits * lead * words * 4

@@ -1,0 +1,240 @@
+"""Serial arbitrary-precision matmul — BARVINN Algorithm 1 on TPU.
+
+Two radices, one algorithm (see DESIGN.md §2):
+
+* ``radix_bits=1`` — the **paper-faithful** bit-serial scheme. Every
+  (activation-bit j, weight-bit k) pair produces a {0,1} plane product;
+  partial products of equal magnitude ``m=j+k`` are summed first and the
+  accumulator is shifted once per magnitude step (magnitude-major Horner,
+  exactly Algorithm 1, including the negated MSB plane for two's-complement
+  operands). ``b_a·b_w`` plane products — the cycle count of the MVU.
+
+* ``radix_bits=s>1`` — the **TPU-native digit-serial** generalization. Bits
+  are grouped into int8 digits in VMEM and each digit pair is one int8 MXU
+  matmul, Horner-combined with coefficient ``2^{s(J+K)}``. For signed
+  ``b<=8`` this is a single MXU matmul; storage stays bit-packed at ``b``
+  bits, so the paper's memory scaling is preserved.
+
+Both paths return the *exact* int32 integer matmul result; this invariant is
+property-tested in ``tests/test_bitserial.py`` and is the oracle for the
+Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitops
+
+__all__ = ["SerialSpec", "serial_matmul", "serial_matmul_packed", "serial_conv2d"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SerialSpec:
+    """Operand precision configuration — the per-MVU CSR settings
+    (weight/activation precision + signedness, paper §3.2)."""
+
+    a_bits: int = 8
+    w_bits: int = 4
+    a_signed: bool = True
+    w_signed: bool = True
+    radix_bits: int = 1  # 1 = faithful bit-serial; 7/8 = MXU digit-serial
+
+    def __post_init__(self):
+        for b in (self.a_bits, self.w_bits):
+            if not 1 <= b <= 16:
+                raise ValueError(f"bit depth {b} outside the MVU's 1..16 range")
+
+    @property
+    def cycles_per_tile(self) -> int:
+        """MVU cycles per 64x64 tile (paper §3.1.1): b_w * b_a."""
+        return self.a_bits * self.w_bits
+
+    @property
+    def num_plane_products(self) -> int:
+        na = bitops.num_digits(self.a_bits, self.radix_bits, self.a_signed)
+        nw = bitops.num_digits(self.w_bits, self.radix_bits, self.w_signed)
+        return na * nw
+
+
+def _plane_dot(xp: jax.Array, wp: jax.Array) -> jax.Array:
+    """One partial-product matmul: (..., K) x (K, N) -> (..., N) int32.
+
+    int8 operands with an int32 accumulator — the MXU-native contraction
+    (the FPGA's adder tree + accumulator in one hardware instruction).
+    """
+    return jax.lax.dot_general(
+        xp,
+        wp,
+        (((xp.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def serial_matmul(x: jax.Array, w: jax.Array, spec: SerialSpec) -> jax.Array:
+    """Exact integer matmul via serial plane products.
+
+    ``x``: (..., K) integer-valued; ``w``: (K, N) integer-valued. Values must
+    be representable in the spec's bit widths (enforced by the quantizer
+    upstream); out-of-range bits are truncated exactly as the RAMs would.
+    """
+    s = spec.radix_bits
+    if s == 1:
+        # ---- faithful Algorithm 1 ----------------------------------------
+        xb = bitops.to_bitplanes(x, spec.a_bits)  # (ba, ..., K) {0,1}
+        wb = bitops.to_bitplanes(w, spec.w_bits)  # (bw, K, N)
+        ca = bitops.plane_coeffs(spec.a_bits, spec.a_signed)
+        cw = bitops.plane_coeffs(spec.w_bits, spec.w_signed)
+        sa = np.sign(ca)  # MSB plane of a signed operand weighs negative
+        sw = np.sign(cw)
+        max_mag = (spec.a_bits - 1) + (spec.w_bits - 1)
+        # partial products of equal magnitude are accumulated first ...
+        partials = [None] * (max_mag + 1)
+        for j in range(spec.a_bits):
+            for k in range(spec.w_bits):
+                p = _plane_dot(xb[j], wb[k])
+                if sa[j] * sw[k] < 0:
+                    p = -p
+                m = j + k
+                partials[m] = p if partials[m] is None else partials[m] + p
+        # ... then the accumulator shifts left once per magnitude step.
+        acc = partials[max_mag]
+        for m in range(max_mag - 1, -1, -1):
+            acc = (acc << 1) + partials[m]
+        return acc
+    # ---- digit-serial (radix 2^s) ----------------------------------------
+    xd = bitops.to_digits(x, spec.a_bits, s, spec.a_signed)
+    wd = bitops.to_digits(w, spec.w_bits, s, spec.w_signed)
+    return _digit_combine(xd, wd, s)
+
+
+def digits_from_planes(planes: jax.Array, bits: int, radix_bits: int,
+                       signed: bool) -> jax.Array:
+    """Assemble int8 digit planes DIRECTLY from {0,1} bit planes, entirely
+    in int8 — no int32 value materialization (this is what the Pallas
+    kernel does per VMEM tile; doing it here keeps the XLA serve path's
+    HBM traffic honest). ``planes``: (bits, ...) int8.
+
+    Signed top digit: the MSB plane enters with negative weight
+    −2^{bits−1−lo} (two's complement arithmetic shift), which fits int8
+    for radix_bits ≤ 8.
+    """
+    s = radix_bits
+    n = bitops.num_digits(bits, s, signed)
+    out = []
+    for j in range(n):
+        lo = j * s
+        hi = min(lo + s, bits)
+        d = planes[lo].astype(jnp.int8)
+        for t in range(lo + 1, hi):
+            p = planes[t].astype(jnp.int8)
+            shift = t - lo
+            if signed and j == n - 1 and t == bits - 1:
+                if shift == 7:
+                    # -128*p via two's-complement wrap of (p << 7)
+                    d = d + jnp.left_shift(p, 7)
+                else:
+                    d = d - p * jnp.int8(1 << shift)
+            else:
+                d = d + p * jnp.int8(1 << shift)
+        if signed and j == n - 1 and hi - 1 == lo and lo == bits - 1:
+            d = -d  # single-bit top digit IS the MSB
+        out.append(d)
+    return jnp.stack(out)
+
+
+def _digit_combine(xd: jax.Array, wd: jax.Array, radix_bits: int) -> jax.Array:
+    """Horner-combine digit plane products: sum_{J,K} 2^{s(J+K)} (x_J . w_K)."""
+    na, nw = xd.shape[0], wd.shape[0]
+    max_mag = (na - 1) + (nw - 1)
+    partials = [None] * (max_mag + 1)
+    for j in range(na):
+        for k in range(nw):
+            p = _plane_dot(xd[j], wd[k])
+            m = j + k
+            partials[m] = p if partials[m] is None else partials[m] + p
+    acc = partials[max_mag]
+    for m in range(max_mag - 1, -1, -1):
+        acc = (acc << radix_bits) + partials[m]
+    return acc
+
+
+def serial_matmul_packed(
+    x_int: jax.Array,
+    w_packed: jax.Array,
+    *,
+    spec: SerialSpec,
+    k: int,
+) -> jax.Array:
+    """Serial matmul consuming **bit-transposed packed weights** — the
+    deployment path. ``w_packed``: (w_bits, ceil(K/32), N) uint32 (lane axis
+    packed); ``x_int``: (..., K) integer activations (already quantized).
+
+    The unpack → digit-assembly → matmul sequence mirrors what the Pallas
+    kernel does per VMEM tile; lowering this with XLA keeps the HBM side of
+    the roofline honest (weight bytes scale with w_bits).
+    """
+    planes = bitops.unpack_bitplanes(w_packed, k, axis=1)  # (bw, K, N) {0,1}
+    s = spec.radix_bits
+    if s == 1:
+        wb = planes
+        xb = bitops.to_bitplanes(x_int, spec.a_bits)
+        ca = bitops.plane_coeffs(spec.a_bits, spec.a_signed)
+        cw = bitops.plane_coeffs(spec.w_bits, spec.w_signed)
+        acc = None
+        max_mag = (spec.a_bits - 1) + (spec.w_bits - 1)
+        partials = [None] * (max_mag + 1)
+        for j in range(spec.a_bits):
+            for kk in range(spec.w_bits):
+                p = _plane_dot(xb[j], wb[kk])
+                if np.sign(ca[j]) * np.sign(cw[kk]) < 0:
+                    p = -p
+                m = j + kk
+                partials[m] = p if partials[m] is None else partials[m] + p
+        acc = partials[max_mag]
+        for m in range(max_mag - 1, -1, -1):
+            acc = (acc << 1) + partials[m]
+        return acc
+    wd = digits_from_planes(planes, spec.w_bits, s, spec.w_signed)
+    xd = bitops.to_digits(x_int, spec.a_bits, s, spec.a_signed)
+    return _digit_combine(xd, wd, s)
+
+
+def serial_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    spec: SerialSpec,
+    *,
+    stride: int = 1,
+    padding: int = 1,
+) -> jax.Array:
+    """Quantized 2D convolution via the serial matmul (NHWC / HWIO).
+
+    The MVU executes convs as AGU-driven walks over 64x64 GEMV tiles
+    (paper §3.1.3); the JAX equivalent is im2col + the same serial GEMM.
+    ``x``: (N, H, W, C_i) ints; ``w``: (F_H, F_W, C_i, C_o) ints.
+    """
+    n, h, wdt, ci = x.shape
+    fh, fw, _, co = w.shape
+    x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    ho = (h + 2 * padding - fh) // stride + 1
+    wo = (wdt + 2 * padding - fw) // stride + 1
+    # im2col: (N, Ho, Wo, FH*FW*Ci) — the NHWC-innermost layout of §3.1.2.
+    patches = jax.lax.conv_general_dilated_patches(
+        x.astype(jnp.float32),
+        filter_shape=(fh, fw),
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ).astype(jnp.int32)
+    # conv_general_dilated_patches returns features as C*FH*FW (channel-major);
+    # reorder w to match: (Ci, FH, FW, Co) -> (Ci*FH*FW, Co)
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(fh * fw * ci, co)
+    out = serial_matmul(patches, wmat, spec)
+    return out.reshape(n, ho, wo, co)

@@ -1,0 +1,110 @@
+"""MVU post-MVP pipeline modules (paper §3.1.4) as composable JAX functions.
+
+The FPGA pipeline after the matrix-vector product is::
+
+    MVP(int accumulate) -> Scaler (27x16 fixed mult) -> Bias add (int32)
+        -> MaxPool/ReLU comparator -> Quantizer/Serializer (emit b-bit planes)
+
+We implement both the bit-exact fixed-point datapath (used by the cost model,
+codegen round-trip tests, and the Pallas kernel epilogue oracle) and a float
+"scaler" used inside LM models where LSQ scales are fp32. The serializer
+re-emits outputs in bit-transposed format, which is why only a DNN's first
+layer ever needs the host-side transposer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops
+from repro.core.quant import QuantSpec, qrange
+
+__all__ = [
+    "ScalerConfig",
+    "scaler_bias",
+    "scaler_bias_fixed",
+    "maxpool_relu",
+    "relu",
+    "quantize_serialize",
+    "QuantSerConfig",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalerConfig:
+    """CSR-style config of the scaler/bias stage."""
+
+    scale_bits: int = 16      # FPGA: 27x16 DSP multiplier
+    bias_bits: int = 32
+    shift: int = 0            # right-shift applied after the fixed multiply
+
+
+def scaler_bias(acc: jax.Array, scale: jax.Array,
+                bias: Optional[jax.Array] = None,
+                dtype=jnp.float32) -> jax.Array:
+    """Float scaler: dequantizing multiply + bias (LM/LSQ path)."""
+    out = acc.astype(dtype) * scale.astype(dtype)
+    if bias is not None:
+        out = out + bias.astype(dtype)
+    return out
+
+
+def scaler_bias_fixed(acc: jax.Array, scale_q: jax.Array, bias_q: jax.Array,
+                      cfg: ScalerConfig = ScalerConfig()) -> jax.Array:
+    """Bit-exact fixed-point scaler: int32 acc * int16 scale >> shift + int32
+    bias — exactly the FPGA datapath (27x16 multiplier, 32-bit adder)."""
+    lo, hi = qrange(cfg.scale_bits, True)
+    scale_q = jnp.clip(scale_q.astype(jnp.int32), lo, hi)
+    prod = acc.astype(jnp.int64) * scale_q.astype(jnp.int64)
+    prod = jnp.right_shift(prod, cfg.shift).astype(jnp.int32)
+    return prod + bias_q.astype(jnp.int32)
+
+
+def relu(x: jax.Array) -> jax.Array:
+    """The comparator against a register initialized to 0."""
+    return jnp.maximum(x, 0)
+
+
+def maxpool_relu(x: jax.Array, window: int = 2, stride: Optional[int] = None,
+                 with_relu: bool = True) -> jax.Array:
+    """Combined MaxPool/ReLU comparator over NHWC maps (paper: the MVU is
+    programmed to stream values in MaxPool-window order into one comparator;
+    here that is a reduce_window whose init value 0 *is* the ReLU)."""
+    stride = stride or window
+    init = 0 if with_relu else -(2 ** 31)
+    if x.dtype in (jnp.float32, jnp.bfloat16, jnp.float16):
+        init = 0.0 if with_relu else -jnp.inf
+    return jax.lax.reduce_window(
+        x, init, jax.lax.max,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSerConfig:
+    """Quantizer/serializer CSRs: output bit depth + MSB position selector."""
+
+    out_bits: int = 8
+    out_signed: bool = True
+    msb_pos: int = 15  # which bit of the 32-bit word becomes the output MSB
+
+
+def quantize_serialize(acc: jax.Array, cfg: QuantSerConfig) -> jax.Array:
+    """Bit-exact quantizer/serializer: select ``out_bits`` starting at
+    ``msb_pos`` from the 32-bit fixed-point word (with saturation), i.e.
+    out = clip(acc >> (msb_pos + 1 - out_bits)). Returns int32 codes; the
+    caller packs them with :func:`repro.core.bitops.bit_transpose` (the
+    serializer writes bit-planes back to activation RAM)."""
+    shift = cfg.msb_pos + 1 - cfg.out_bits
+    if shift >= 0:
+        v = jnp.right_shift(acc.astype(jnp.int32), shift)
+    else:
+        v = jnp.left_shift(acc.astype(jnp.int32), -shift)
+    lo, hi = qrange(cfg.out_bits, cfg.out_signed)
+    return jnp.clip(v, lo, hi)

@@ -1,0 +1,186 @@
+"""Quantization: LSQ (Learned Step Size Quantization, Esser et al. 2020) QAT,
+PTQ calibration, and the integer/packed deployment path.
+
+BARVINN's deployment flow is: train with LSQ offline → export weights in
+bit-transposed format → run integer inference on the MVUs, with the scaler /
+bias pipeline modules applying the LSQ scales in fixed point. This module
+implements the full flow in JAX:
+
+* :func:`lsq_fake_quant` — QAT fake-quant with LSQ's straight-through
+  estimator and gradient-scaled step-size learning (``train_step``).
+* :func:`quantize_int` / :func:`dequantize` — the real integer path
+  (``serve_step``), feeding :mod:`repro.core.bitserial`.
+* :func:`pack_weights` — bit-transposed export (the code generator's weight
+  pre-processing, paper §3.1.2/§3.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitops
+from repro.core.bitserial import SerialSpec
+
+__all__ = [
+    "QuantSpec",
+    "qrange",
+    "lsq_fake_quant",
+    "init_alpha",
+    "quantize_int",
+    "dequantize",
+    "calibrate",
+    "pack_weights",
+    "QuantizedWeight",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Precision of one tensor channel of the pipeline (weights or acts)."""
+
+    bits: int = 8
+    signed: bool = True
+    per_channel: bool = False  # weights: scale per output channel (scaler RAM)
+
+    def __post_init__(self):
+        if not 1 <= self.bits <= 16:
+            raise ValueError("bits must be in 1..16 (MVU operand range)")
+
+
+def qrange(bits: int, signed: bool) -> tuple[int, int]:
+    if signed:
+        return -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    return 0, (1 << bits) - 1
+
+
+def _unbroadcast(x: jax.Array, shape: tuple) -> jax.Array:
+    """Sum ``x`` down to ``shape`` (inverse of numpy broadcasting)."""
+    if shape == ():
+        return jnp.sum(x)
+    extra = x.ndim - len(shape)
+    if extra:
+        x = jnp.sum(x, axis=tuple(range(extra)))
+    axes = tuple(i for i, s in enumerate(shape) if s == 1 and x.shape[i] != 1)
+    if axes:
+        x = jnp.sum(x, axis=axes, keepdims=True)
+    return x
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _lsq(x, alpha, qn, qp, gscale):
+    q = jnp.clip(jnp.round(x / alpha), qn, qp)
+    return q * alpha
+
+
+def _lsq_fwd(x, alpha, qn, qp, gscale):
+    return _lsq(x, alpha, qn, qp, gscale), (x / alpha, alpha)
+
+
+def _lsq_bwd(qn, qp, gscale, res, g):
+    q, alpha = res
+    lower = q <= qn
+    upper = q >= qp
+    mid = jnp.logical_not(jnp.logical_or(lower, upper))
+    # dx: straight-through inside the clip range
+    dx = jnp.where(mid, g, jnp.zeros_like(g))
+    # dalpha per LSQ: round(q)-q inside; Qn/Qp at the clips; grad-scaled
+    dalpha_elem = jnp.where(
+        mid,
+        jnp.round(q) - q,
+        jnp.where(lower, jnp.asarray(qn, g.dtype), jnp.asarray(qp, g.dtype)),
+    ) * g
+    dalpha = _unbroadcast(dalpha_elem, alpha.shape) * gscale
+    return dx, dalpha.astype(alpha.dtype)
+
+
+_lsq.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+def lsq_fake_quant(x: jax.Array, alpha: jax.Array, spec: QuantSpec) -> jax.Array:
+    """LSQ fake quantization: differentiable wrt both ``x`` and ``alpha``.
+
+    ``alpha`` is a scalar (per-tensor) or broadcastable (per-channel) step
+    size. The LSQ gradient scale ``1/sqrt(N * Qp)`` stabilizes step-size
+    learning (Esser et al., §2.2).
+    """
+    qn, qp = qrange(spec.bits, spec.signed)
+    n = x.size / max(1, alpha.size)
+    gscale = 1.0 / np.sqrt(max(1.0, n * max(qp, 1)))
+    alpha = jnp.maximum(jnp.abs(alpha), 1e-8).astype(x.dtype)
+    return _lsq(x, alpha, float(qn), float(qp), gscale)
+
+
+def init_alpha(x: jax.Array, spec: QuantSpec, axis=None) -> jax.Array:
+    """LSQ init: 2 * mean|x| / sqrt(Qp)."""
+    _, qp = qrange(spec.bits, spec.signed)
+    m = jnp.mean(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return 2.0 * m / np.sqrt(max(qp, 1)) + 1e-8
+
+
+def quantize_int(x: jax.Array, alpha: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Real integer quantization (serve path): int32 codes in [Qn, Qp]."""
+    qn, qp = qrange(spec.bits, spec.signed)
+    return jnp.clip(jnp.round(x / alpha), qn, qp).astype(jnp.int32)
+
+
+def dequantize(q: jax.Array, alpha: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return q.astype(dtype) * alpha.astype(dtype)
+
+
+def calibrate(x: jax.Array, spec: QuantSpec, percentile: float = 99.9,
+              axis=None) -> jax.Array:
+    """PTQ step-size calibration from a sample batch (percentile absmax)."""
+    _, qp = qrange(spec.bits, spec.signed)
+    hi = jnp.percentile(jnp.abs(x), percentile, axis=axis,
+                        keepdims=axis is not None)
+    return jnp.maximum(hi, 1e-8) / max(qp, 1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedWeight:
+    """Deployment weight: bit-transposed packed codes + LSQ scale.
+
+    ``packed``: (w_bits, ceil(K/32), N) uint32 — lane (input) axis packed, as
+    the weight RAM stores it. ``scale``: (N,) or scalar fp32. This is what
+    the code generator exports and what ``serve_step`` params contain, so
+    ``memory_analysis`` sees b-bit weight footprints.
+    """
+
+    packed: jax.Array
+    scale: jax.Array
+    bits: int
+    signed: bool
+    k: int  # logical reduction length
+
+    def tree_flatten(self):
+        return (self.packed, self.scale), (self.bits, self.signed, self.k)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        bits, signed, k = aux
+        return cls(children[0], children[1], bits, signed, k)
+
+    @property
+    def out_features(self) -> int:
+        return self.packed.shape[-1]
+
+
+def pack_weights(w: jax.Array, spec: QuantSpec,
+                 alpha: Optional[jax.Array] = None) -> QuantizedWeight:
+    """Quantize + bit-transpose a float weight matrix ``(K, N)`` for
+    deployment (per-output-channel scales by default, like the scaler RAM)."""
+    if alpha is None:
+        alpha = init_alpha(w, spec, axis=0) if spec.per_channel else init_alpha(w, spec)
+    q = quantize_int(w, alpha, spec)  # (K, N) ints
+    planes = bitops.to_bitplanes(q, spec.bits)  # (bits, K, N)
+    planes = bitops.pad_to(planes, 32, axis=1)
+    packed = bitops.pack_bitplanes(planes, axis=1)  # (bits, ceil(K/32), N)
+    return QuantizedWeight(packed, jnp.squeeze(alpha), spec.bits, spec.signed,
+                           w.shape[0])

@@ -1,0 +1,91 @@
+"""Activation-sharding context: lets model code state logical layouts
+("dp", "tp", "sp") without importing mesh details; launchers bind the
+logical axes to mesh axes. Outside a bound context every constraint is a
+no-op, so single-device tests run unchanged."""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+__all__ = ["bind_axes", "constrain", "axis", "active"]
+
+
+def _get():
+    return getattr(_state, "axes", None)
+
+
+@contextlib.contextmanager
+def bind_axes(dp: Union[str, Tuple[str, ...], None] = None,
+              tp: Optional[str] = None, sp: Optional[str] = None,
+              pp: Optional[str] = None, mesh=None):
+    """Bind logical axes to mesh axis names for the enclosed trace.
+    ``mesh`` supplies axis sizes so constraints skip non-dividing dims."""
+    prev = _get()
+    sizes = dict(mesh.shape) if mesh is not None else {}
+    _state.axes = {"dp": dp, "tp": tp, "sp": sp, "pp": pp,
+                   "__sizes__": sizes}
+    try:
+        yield
+    finally:
+        _state.axes = prev
+
+
+def active() -> bool:
+    return _get() is not None
+
+
+def axis(name: str):
+    ctx = _get()
+    return None if ctx is None else ctx.get(name)
+
+
+def axis_size(name: str) -> int:
+    """Product of the mesh-axis sizes bound to a logical axis (1 if unbound
+    or sizes unknown)."""
+    ctx = _get()
+    if ctx is None:
+        return 1
+    ax = ctx.get(name)
+    if ax is None:
+        return 1
+    sizes = ctx.get("__sizes__", {})
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def constrain(x: jax.Array, *logical) -> jax.Array:
+    """with_sharding_constraint over logical axis names (or None). A
+    dimension whose bound mesh axes don't divide it is left unsharded."""
+    ctx = _get()
+    if ctx is None:
+        return x
+    sizes = ctx.get("__sizes__", {})
+    spec = []
+    for dim, name in enumerate(logical):
+        ax = ctx.get(name) if isinstance(name, str) else None
+        if ax is None:
+            spec.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        total = 1
+        for a in axes:
+            total *= sizes.get(a, 1)
+        if sizes and (total <= 1 or dim >= x.ndim
+                      or x.shape[dim] % total != 0):
+            spec.append(None)
+            continue
+        spec.append(axes if len(axes) > 1 else axes[0])
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x  # no mesh in scope: leave placement to the compiler

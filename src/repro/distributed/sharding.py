@@ -1,0 +1,203 @@
+"""Sharding rules: pytree path → PartitionSpec.
+
+TP follows the Megatron column/row pattern over the ``model`` axis (QKV/up
+projections column-split, O/down row-split, vocab embedding + head
+vocab-split); EP shards the expert axis of MoE weights over ``model``; DP
+shards the batch over (``pod``, ``data``); optimizer state follows its
+parameter (ZeRO-1 over ``data`` optionally). Dimensions that don't divide
+evenly fall back to replication (never a compile failure).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_pspec", "tree_pspecs", "tree_shardings", "batch_pspec",
+           "cache_pspecs", "dp_axes_of"]
+
+
+def dp_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _fits(mesh: Mesh, ax, dim: int) -> bool:
+    if ax is None or dim <= 0:
+        return False
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % size == 0
+
+
+def _maybe(mesh: Mesh, ax, dim: int):
+    return ax if _fits(mesh, ax, dim) else None
+
+
+# (path regex, function(shape, mesh, path) -> PartitionSpec)
+# Paths look like: groups/0/attn/wq/w, groups/1/moe/w_up/w_packed, embed, ...
+_COL = ("wq", "wk", "wv", "w_up", "w_gate", "in_proj", "w_dkv", "w_uk",
+        "w_uv", "shared_up", "shared_gate")
+_ROW = ("wo", "w_down", "out_proj", "shared_down")
+
+
+def _w_spec(shape, mesh, path, col: bool, expert: bool):
+    """Float weight (…, K, N): 2D "FSDP + TP" sharding — the TP (Megatron)
+    axis shards N for column-parallel / K for row-parallel layers over
+    ``model``; the other contraction dim is sharded over the DP axes (FSDP:
+    weights gathered per layer inside the scan). Required for the 100B+
+    dense configs: fp32 master + Adam m/v must spread over all 512 chips."""
+    nd = len(shape)
+    spec = [None] * nd
+    dp = dp_axes_of(mesh)
+    if expert and nd >= 3:
+        # (L?, E, K, N): experts over model (EP); K over DP axes (FSDP)
+        e_dim = nd - 3
+        spec[e_dim] = _maybe(mesh, "model", shape[e_dim])
+        if _fits(mesh, dp, shape[nd - 2]):
+            spec[nd - 2] = dp if len(dp) > 1 else dp[0]
+        return P(*spec)
+    tp_dim = nd - 1 if col else nd - 2
+    fsdp_dim = nd - 2 if col else nd - 1
+    spec[tp_dim] = _maybe(mesh, "model", shape[tp_dim])
+    if _fits(mesh, dp, shape[fsdp_dim]):
+        spec[fsdp_dim] = dp if len(dp) > 1 else dp[0]
+    return P(*spec)
+
+
+def _packed_spec(shape, mesh, path, col: bool, expert: bool):
+    """Packed weight (…, bits, K/32, N)."""
+    nd = len(shape)
+    spec = [None] * nd
+    if expert and nd >= 4:
+        e_dim = nd - 4
+        spec[e_dim] = _maybe(mesh, "model", shape[e_dim])
+        return P(*spec)
+    tgt = nd - 1 if col else nd - 2
+    spec[tgt] = _maybe(mesh, "model", shape[tgt])
+    return P(*spec)
+
+
+def param_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf."""
+    parts = path.split("/")
+    leaf = parts[-1]
+    parent = parts[-2] if len(parts) > 1 else ""
+    expert = any(p in ("w_up", "w_gate", "w_down") for p in parts) and \
+        any(p == "moe" for p in parts) and parent in ("w_up", "w_gate",
+                                                      "w_down")
+    col = parent in _COL
+    row = parent in _ROW
+    if path == "embed" or leaf == "embed":
+        dp = dp_axes_of(mesh)
+        d_ax = (dp if len(dp) > 1 else dp[0]) if _fits(mesh, dp, shape[1]) \
+            else None
+        return P(_maybe(mesh, "model", shape[0]), d_ax)
+    if parent == "head":
+        if leaf == "w":
+            dp = dp_axes_of(mesh)
+            d_ax = (dp if len(dp) > 1 else dp[0]) \
+                if _fits(mesh, dp, shape[0]) else None
+            return P(d_ax, _maybe(mesh, "model", shape[-1]))
+        return P(*([None] * len(shape)))
+    if leaf == "w_packed":
+        return _packed_spec(shape, mesh, path, col, expert)
+    if leaf == "w" and (col or row):
+        return _w_spec(shape, mesh, path, col, expert)
+    if leaf in ("b", "alpha_w", "scale") and col:
+        spec = [None] * len(shape)
+        spec[-1] = _maybe(mesh, "model", shape[-1])
+        return P(*spec)
+    if leaf == "router":
+        return P(*([None] * len(shape)))
+    if parent == "ssm" or leaf in ("conv_w", "conv_b", "A_log", "D",
+                                   "dt_bias"):
+        # per-channel / per-head vectors follow the d_inner TP split
+        spec = [None] * len(shape)
+        if len(shape) >= 1 and leaf in ("conv_b", "norm"):
+            spec[-1] = _maybe(mesh, "model", shape[-1])
+        elif leaf == "conv_w":
+            spec[-1] = _maybe(mesh, "model", shape[-1])
+        elif leaf in ("A_log", "D", "dt_bias"):
+            spec[-1] = _maybe(mesh, "model", shape[-1])
+        return P(*spec)
+    # norms, scalars, everything else: replicated
+    return P(*([None] * len(shape)))
+
+
+def _path_str(kp) -> str:
+    out = []
+    for k in kp:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def tree_pspecs(tree, mesh: Mesh, kind: str = "param"):
+    """PartitionSpecs for a whole (abstract) pytree."""
+    fn = param_pspec if kind == "param" else cache_pspec
+
+    def one(kp, leaf):
+        shape = getattr(leaf, "shape", ())
+        return fn(_path_str(kp), tuple(shape), mesh)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def tree_shardings(tree, mesh: Mesh, kind: str = "param"):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_pspecs(tree, mesh, kind))
+
+
+def batch_pspec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Data batch: shard the leading (batch) dim over all DP axes."""
+    dp = dp_axes_of(mesh)
+    spec = [None] * len(shape)
+    if shape and _fits(mesh, dp, shape[0]):
+        spec[0] = dp if len(dp) > 1 else dp[0]
+    return P(*spec)
+
+
+def cache_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Decode-cache leaves. Layout (L, B, S, H, D) for KV, (L, B, S, lora)
+    for MLA latents, (L, B, H, N, P) for SSM state."""
+    leaf = path.split("/")[-1]
+    dp = dp_axes_of(mesh)
+    nd = len(shape)
+    spec = [None] * nd
+    if nd >= 2:
+        spec[1] = dp if _fits(mesh, dp, shape[1]) else None
+        if isinstance(spec[1], tuple) and len(spec[1]) == 1:
+            spec[1] = spec[1][0]
+    if leaf in ("k", "v", "k_q", "v_q") and nd == 5:
+        # TP over kv heads when they divide; otherwise shard the SEQUENCE
+        # axis over model (flash-decoding style): attention contracts S with
+        # a partial-sum all-reduce, and the cache always fits — a GQA cache
+        # replicated across TP would exceed HBM for the 8-kv-head 100B archs
+        if _fits(mesh, "model", shape[3]):
+            spec[3] = "model"
+        else:
+            spec[2] = _maybe(mesh, "model", shape[2])
+    elif leaf in ("k_s", "v_s") and nd == 4:
+        if _fits(mesh, "model", shape[3]):
+            spec[3] = "model"
+        else:
+            spec[2] = _maybe(mesh, "model", shape[2])
+    elif leaf == "c" and nd == 4:
+        spec[3] = _maybe(mesh, "model", shape[3])      # latent dim
+        if spec[3] is None:
+            spec[2] = _maybe(mesh, "model", shape[2])
+    elif leaf == "k_rope" and nd == 4:
+        spec[2] = _maybe(mesh, "model", shape[2])      # rope dim is tiny
+    elif leaf == "h" and nd == 5:
+        spec[2] = _maybe(mesh, "model", shape[2])      # ssm heads
+    elif leaf == "conv" and nd == 4:
+        spec[3] = _maybe(mesh, "model", shape[3])      # channels
+    return P(*spec)

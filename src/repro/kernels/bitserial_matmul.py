@@ -1,0 +1,231 @@
+"""Pallas TPU kernel: arbitrary-precision serial matmul over bit-transposed
+packed weights, with the MVU post-pipeline (scaler/bias/ReLU/requant) fused
+as the epilogue.
+
+TPU mapping of the BARVINN MVU (DESIGN.md §2):
+
+* HBM holds weights **bit-packed** (``uint32`` words, lane axis packed) — the
+  bytes moved scale with the configured ``w_bits``, exactly like the FPGA
+  weight RAM.
+* Each grid step copies one ``(w_bits, block_k/32, block_n)`` packed tile
+  into VMEM (BlockSpec pipelining = the AGU walking RAM tiles), unpacks the
+  bit planes with vector shifts (VREG work), assembles radix-``2^s`` digit
+  planes, and issues one int8 MXU matmul per (activation-digit, weight-digit)
+  pair — magnitude-major, Horner-accumulated into an int32 VMEM scratch
+  accumulator (the VVP shifter-accumulator).
+* ``radix_bits=1`` reproduces Algorithm 1 literally: ``b_a*b_w`` {0,1}-plane
+  MXU matmuls per tile, MSB planes entering with negative sign for signed
+  operands. ``radix_bits=7/8`` is the MXU-native digit-serial variant.
+* On the last reduction step the epilogue applies the per-output-channel
+  scaler + bias, the ReLU comparator, and optionally the quantizer/serializer
+  (emitting low-bit integer codes ready for bit-transposed repacking).
+
+Grid: ``(M/bm, N/bn, K/bk)``; m/n parallel, k sequential ("arbitrary").
+Default blocks (128, 128, 512) keep the working set ≪ VMEM: x-tile 64 KiB
+int8, packed w-tile ``w_bits*8`` KiB, unpacked plane 64 KiB, acc 64 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import jax.experimental.pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core import bitops
+from repro.core.bitserial import SerialSpec
+from repro.core.quant import QuantSpec, qrange
+
+__all__ = ["bitserial_matmul_pallas"]
+
+
+def _unpack_planes(words, block_k: int):
+    """(bw, G, bn) uint32 -> list of (block_k, bn) int8 {0,1} planes."""
+    bw, g, bn = words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32).reshape(1, 32, 1)
+    planes = []
+    for b in range(bw):
+        bits = jnp.bitwise_and(
+            jnp.right_shift(words[b][:, None, :], shifts), jnp.uint32(1)
+        )
+        planes.append(bits.reshape(g * 32, bn)[:block_k].astype(jnp.int8))
+    return planes
+
+
+def _weight_operands(planes, spec: SerialSpec):
+    """Assemble weight digit planes (int8) + their Horner magnitudes.
+
+    radix_bits == 1: the bit planes themselves (faithful Algorithm 1), with
+    the signed-MSB plane carrying a negative unit coefficient.
+    radix_bits > 1 : reconstruct values, split into int8 digits.
+    Returns list of (plane:int8 (bk,bn), magnitude:int, negate:bool).
+    """
+    s = spec.radix_bits
+    bw = spec.w_bits
+    if s == 1:
+        out = []
+        for kbit, p in enumerate(planes):
+            neg = spec.w_signed and kbit == bw - 1
+            out.append((p, kbit, neg))
+        return out
+    coeffs = bitops.plane_coeffs(bw, spec.w_signed)
+    vals = planes[0].astype(jnp.int32) * int(coeffs[0])
+    for kbit in range(1, bw):
+        vals = vals + planes[kbit].astype(jnp.int32) * int(coeffs[kbit])
+    nd = bitops.num_digits(bw, s, spec.w_signed)
+    out = []
+    for j in range(nd):
+        d = jnp.right_shift(vals, j * s)
+        if j < nd - 1:
+            d = jnp.bitwise_and(d, (1 << s) - 1)
+        out.append((d.astype(jnp.int8), j * s, False))
+    return out
+
+
+def _act_operands(x_tile, spec: SerialSpec):
+    """Activation planes from int8/int32 codes (the activation RAM side)."""
+    s = spec.radix_bits
+    ba = spec.a_bits
+    xi = x_tile.astype(jnp.int32)
+    if s == 1:
+        u = jnp.bitwise_and(xi, (1 << ba) - 1)
+        out = []
+        for j in range(ba):
+            p = jnp.bitwise_and(jnp.right_shift(u, j), 1).astype(jnp.int8)
+            neg = spec.a_signed and j == ba - 1
+            out.append((p, j, neg))
+        return out
+    nd = bitops.num_digits(ba, s, spec.a_signed)
+    if spec.a_signed:
+        u = jnp.bitwise_and(xi, (1 << ba) - 1)
+        xi = u - jnp.left_shift(
+            jnp.bitwise_and(jnp.right_shift(u, ba - 1), 1), ba)
+    else:
+        xi = jnp.bitwise_and(xi, (1 << ba) - 1)
+    out = []
+    for j in range(nd):
+        d = jnp.right_shift(xi, j * s)
+        if j < nd - 1:
+            d = jnp.bitwise_and(d, (1 << s) - 1)
+        out.append((d.astype(jnp.int8), j * s, False))
+    return out
+
+
+def _kernel(x_ref, w_ref, scale_ref, bias_ref, out_ref, acc_ref, *,
+            spec: SerialSpec, block_k: int, relu: bool, out_dtype,
+            requant: Optional[QuantSpec], n_k: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w_planes = _unpack_planes(w_ref[...], block_k)
+    w_ops = _weight_operands(w_planes, spec)
+    x_ops = _act_operands(x_ref[...], spec)
+
+    # magnitude-major Horner over plane pairs (Algorithm 1): gather equal
+    # magnitudes first, then a single shift per magnitude step.
+    max_mag = max(mx for _, mx, _ in x_ops) + max(mw for _, mw, _ in w_ops)
+    partials = [None] * (max_mag + 1)
+    for xp, mx, nx in x_ops:
+        for wp, mw, nw in w_ops:
+            p = jax.lax.dot_general(
+                xp, wp, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            if nx != nw:
+                p = -p
+            m = mx + mw
+            partials[m] = p if partials[m] is None else partials[m] + p
+    tile_acc = partials[max_mag]
+    if tile_acc is None:
+        tile_acc = jnp.zeros_like(acc_ref)
+    for m in range(max_mag - 1, -1, -1):
+        tile_acc = (tile_acc << 1)
+        if partials[m] is not None:
+            tile_acc = tile_acc + partials[m]
+    acc_ref[...] += tile_acc
+
+    @pl.when(kk == n_k - 1)
+    def _epilogue():
+        acc = acc_ref[...].astype(jnp.float32)
+        out = acc * scale_ref[...].astype(jnp.float32)[None, :]
+        out = out + bias_ref[...].astype(jnp.float32)[None, :]
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        if requant is not None:
+            qn, qp = qrange(requant.bits, requant.signed)
+            out = jnp.clip(jnp.round(out), qn, qp)
+        out_ref[...] = out.astype(out_dtype)
+
+
+def bitserial_matmul_pallas(
+    x: jax.Array,
+    w_packed: jax.Array,
+    scale: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    spec: SerialSpec,
+    k: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    relu: bool = False,
+    out_dtype=jnp.float32,
+    requant: Optional[QuantSpec] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused MVU forward: ``relu?((x @ W)*scale + bias)`` from packed planes.
+
+    ``x``: (M, K) int codes; ``w_packed``: (w_bits, ceil(K/32), N) uint32;
+    ``scale``/``bias``: (N,). When ``requant`` is given, the epilogue emits
+    integer codes (int8) — the quantizer/serializer stage — and ``scale``
+    must already fold the requant step size.
+    """
+    m, kx = x.shape
+    assert kx == k, (kx, k)
+    bw, kwords, n = w_packed.shape
+    assert bw == spec.w_bits
+    # pad to block multiples (the code generator pads tiles the same way)
+    mp = -(-m // block_m) * block_m
+    np_ = -(-n // block_n) * block_n
+    kp = -(-k // block_k) * block_k
+    assert block_k % 32 == 0
+    x = jnp.pad(x.astype(jnp.int8 if spec.a_bits <= 8 else jnp.int32),
+                ((0, mp - m), (0, kp - k)))
+    w_packed = jnp.pad(w_packed, ((0, 0), (0, kp // 32 - kwords), (0, np_ - n)))
+    scale = jnp.pad(jnp.broadcast_to(jnp.asarray(scale, jnp.float32), (n,)),
+                    (0, np_ - n))
+    bias = jnp.zeros((n,), jnp.float32) if bias is None else jnp.asarray(bias, jnp.float32)
+    bias = jnp.pad(bias, (0, np_ - n))
+
+    n_k = kp // block_k
+    grid = (mp // block_m, np_ // block_n, n_k)
+    out_dt = jnp.int8 if requant is not None and requant.bits <= 8 else out_dtype
+
+    kernel = functools.partial(
+        _kernel, spec=spec, block_k=block_k, relu=relu, out_dtype=out_dt,
+        requant=requant, n_k=n_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bw, block_k // 32, block_n),
+                         lambda i, j, kk: (0, kk, j)),
+            pl.BlockSpec((block_n,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((block_n,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dt),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w_packed, scale, bias)
+    return out[:m, :n]

@@ -1,0 +1,105 @@
+"""Jit'd dispatch wrappers around the bit-serial matmul.
+
+``backend`` selection:
+
+* ``"pallas"``    — the TPU kernel (``interpret=True`` on CPU for tests),
+* ``"xla"``       — the pure-JAX plane-einsum path (used by the multi-pod
+                    dry-run so XLA's cost analysis sees the real dataflow),
+* ``"ref"``       — alias of the oracle in :mod:`repro.kernels.ref`.
+
+The higher-level :func:`quantized_linear` is what the model zoo calls in
+``serve_step``: runtime activation quantization → serial matmul from packed
+weights → fused dequant scaler/bias (and optional ReLU / requant).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitserial import SerialSpec, serial_matmul_packed
+from repro.core.quant import QuantSpec, QuantizedWeight, quantize_int, qrange
+from repro.kernels.bitserial_matmul import bitserial_matmul_pallas
+from repro.kernels.ref import bitserial_matmul_ref
+
+__all__ = ["serial_matmul_op", "quantized_linear"]
+
+
+def serial_matmul_op(
+    x: jax.Array,
+    w_packed: jax.Array,
+    scale: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    spec: SerialSpec,
+    k: int,
+    relu: bool = False,
+    out_dtype=jnp.float32,
+    requant: Optional[QuantSpec] = None,
+    backend: str = "xla",
+    interpret: bool = False,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+) -> jax.Array:
+    """Dispatch one fused serial matmul. ``x``: (..., K) int codes."""
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    if backend == "pallas":
+        out = bitserial_matmul_pallas(
+            x2, w_packed, scale, bias, spec=spec, k=k, relu=relu,
+            out_dtype=out_dtype, requant=requant, interpret=interpret,
+            block_m=block_m, block_n=block_n, block_k=block_k)
+    elif backend in ("xla", "ref"):
+        if backend == "ref":
+            out = bitserial_matmul_ref(
+                x2, w_packed, scale, bias, spec=spec, k=k, relu=relu,
+                out_dtype=out_dtype, requant=requant,
+                requant_scale=jnp.asarray(1.0, jnp.float32))
+        else:
+            acc = serial_matmul_packed(x2.astype(jnp.int32), w_packed,
+                                       spec=spec, k=k)
+            out = acc.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
+            if bias is not None:
+                out = out + jnp.asarray(bias, jnp.float32)
+            if relu:
+                out = jnp.maximum(out, 0.0)
+            if requant is not None:
+                qn, qp = qrange(requant.bits, requant.signed)
+                out = jnp.clip(jnp.round(out), qn, qp).astype(
+                    jnp.int8 if requant.bits <= 8 else jnp.int32)
+            else:
+                out = out.astype(out_dtype)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return out.reshape(lead + (out.shape[-1],))
+
+
+def quantized_linear(
+    x: jax.Array,
+    qw: QuantizedWeight,
+    act_alpha: jax.Array,
+    *,
+    a_bits: int = 8,
+    a_signed: bool = True,
+    radix_bits: int = 7,
+    bias: Optional[jax.Array] = None,
+    relu: bool = False,
+    backend: str = "xla",
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Full deployment linear: float acts → int codes → serial matmul →
+    dequant. ``scale`` folds ``act_alpha * w_scale`` per output channel
+    (the scaler RAM contents)."""
+    aspec = QuantSpec(a_bits, a_signed)
+    codes = quantize_int(x, act_alpha, aspec)
+    spec = SerialSpec(a_bits=a_bits, w_bits=qw.bits, a_signed=a_signed,
+                      w_signed=qw.signed, radix_bits=radix_bits)
+    scale = jnp.asarray(act_alpha, jnp.float32) * jnp.asarray(qw.scale, jnp.float32)
+    return serial_matmul_op(
+        codes, qw.packed, scale, bias, spec=spec, k=qw.k, relu=relu,
+        out_dtype=out_dtype, backend=backend, interpret=interpret)

@@ -1,0 +1,80 @@
+"""Pallas kernel for the quantizer/serializer unit (paper §3.1.4 QuantSer):
+fused quantize → clip → bit-transpose pack.
+
+Takes float activations, emits uint32-packed bit planes (lane axis packed),
+i.e. the format the next layer's serial matmul consumes — on the FPGA this
+unit is why only the first layer ever needs a host-side transpose; on TPU
+it keeps requantized activations at b-bit in HBM between layers.
+
+Grid tiles the (rows, lanes) plane; each program quantizes a
+(block_r, block_l) tile and packs ``block_l/32`` words per bit plane.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core.quant import QuantSpec, qrange
+
+__all__ = ["quantize_pack_pallas", "quantize_pack_ref"]
+
+
+def quantize_pack_ref(x: jax.Array, scale: jax.Array,
+                      spec: QuantSpec) -> jax.Array:
+    """Oracle: (R, L) floats -> (bits, R, ceil(L/32)) uint32 packed planes."""
+    from repro.core import bitops
+    from repro.core.quant import quantize_int
+    codes = quantize_int(x, scale, spec)
+    planes = bitops.pad_to(bitops.to_bitplanes(codes, spec.bits), 32, axis=-1)
+    return bitops.pack_bitplanes(planes, axis=-1)
+
+
+def _kernel(x_ref, scale_ref, out_ref, *, bits: int, signed: bool,
+            block_l: int):
+    qn, qp = qrange(bits, signed)
+    x = x_ref[...].astype(jnp.float32)
+    codes = jnp.clip(jnp.round(x / scale_ref[0]), qn, qp).astype(jnp.int32)
+    u = jnp.bitwise_and(codes, (1 << bits) - 1).astype(jnp.uint32)
+    r, l = u.shape
+    w = u.reshape(r, l // 32, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    for b in range(bits):
+        bitsel = jnp.bitwise_and(jnp.right_shift(w, jnp.uint32(b)),
+                                 jnp.uint32(1))
+        out_ref[b] = jnp.sum(bitsel * weights, axis=-1, dtype=jnp.uint32)
+
+
+def quantize_pack_pallas(x: jax.Array, scale: jax.Array, spec: QuantSpec, *,
+                         block_r: int = 256, block_l: int = 512,
+                         interpret: bool = False) -> jax.Array:
+    """x: (R, L) float; scale: scalar step size. Returns
+    (bits, R, ceil(L/32)) uint32 — identical to the oracle."""
+    r, l = x.shape
+    rp = -(-r // block_r) * block_r
+    lp = -(-l // max(block_l, 32)) * max(block_l, 32)
+    block_l = max(min(block_l, lp), 32)
+    x = jnp.pad(x, ((0, rp - r), (0, lp - l)))
+    scale = jnp.broadcast_to(jnp.asarray(scale, jnp.float32), (1,))
+
+    kernel = functools.partial(_kernel, bits=spec.bits, signed=spec.signed,
+                               block_l=block_l)
+    out = pl.pallas_call(
+        kernel,
+        grid=(rp // block_r, lp // block_l),
+        in_specs=[
+            pl.BlockSpec((block_r, block_l), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((spec.bits, block_r, block_l // 32),
+                               lambda i, j: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((spec.bits, rp, lp // 32),
+                                       jnp.uint32),
+        interpret=interpret,
+    )(x, scale)
+    return out[:, :r, : -(-l // 32)]

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the bit-serial matmul kernel.
+
+Mathematically: ``out = relu?(( x_codes @ W_codes ) * scale + bias)`` where
+``W_codes`` are the b_w-bit integer codes stored bit-transposed in
+``w_packed`` and ``x_codes`` are b_a-bit integer activation codes. Plane
+ordering and accumulation follow BARVINN Algorithm 1 via
+:func:`repro.core.bitserial.serial_matmul_packed`.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitserial import SerialSpec, serial_matmul_packed
+from repro.core.quant import QuantSpec, qrange
+
+
+def bitserial_matmul_ref(
+    x: jax.Array,
+    w_packed: jax.Array,
+    scale: jax.Array,
+    bias: Optional[jax.Array],
+    *,
+    spec: SerialSpec,
+    k: int,
+    relu: bool = False,
+    out_dtype=jnp.float32,
+    requant: Optional[QuantSpec] = None,
+    requant_scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Oracle. ``x``: (M, K) integer codes (any int dtype); ``w_packed``:
+    (w_bits, ceil(K/32), N) uint32; ``scale``: (N,) or scalar; ``bias``:
+    (N,) or None."""
+    acc = serial_matmul_packed(x.astype(jnp.int32), w_packed, spec=spec, k=k)
+    out = acc.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
+    if bias is not None:
+        out = out + jnp.asarray(bias, jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    if requant is not None:
+        qn, qp = qrange(requant.bits, requant.signed)
+        codes = jnp.clip(jnp.round(out / requant_scale), qn, qp)
+        return codes.astype(jnp.int8 if requant.bits <= 8 else jnp.int32)
+    return out.astype(out_dtype)

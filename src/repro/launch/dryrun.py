@@ -1,0 +1,298 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) cell with ShapeDtypeStruct inputs on the production meshes
+(16x16 single-pod / 2x16x16 multi-pod), record ``memory_analysis()`` /
+``cost_analysis()`` and the collective-operand bytes parsed from the
+optimized HLO. Results are cached as JSON under ``artifacts/dryrun/`` —
+EXPERIMENTS.md §Dry-run/§Roofline are generated from them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-1.6b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+Flags: --radix {1,7} (1 = paper-faithful bit-serial serve path, 7 = MXU
+digit-serial), --remat-policy, --seq-shard, --force.
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_arch, input_specs, list_archs
+from repro.distributed.context import bind_axes
+from repro.distributed.sharding import (batch_pspec, dp_axes_of,
+                                        tree_pspecs, tree_shardings)
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import (decode_step, init_caches, init_params,
+                                      loss_fn, pack_params, prefill)
+from repro.optim.optimizer import AdamWConfig, adamw_init, adamw_update
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+# --------------------------------------------------------------- HLO parse
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "s4": 0.5,
+                "u4": 0.5}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(tok_dtype: str, dims: str) -> float:
+    if tok_dtype not in _DTYPE_BYTES:
+        return 0.0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[tok_dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in (per-device) HLO."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT )?[%\w.\-]+ = (.+?) (all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(?:-start|-done)?\(", ls)
+        if not m:
+            continue
+        if "-done(" in ls:
+            continue  # avoid double counting async pairs
+        result_sig, op = m.group(1), m.group(2)
+        nbytes = sum(_shape_bytes(d, dims)
+                     for d, dims in _SHAPE_RE.findall(result_sig))
+        out[op] += nbytes
+        counts[op] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": float(sum(out.values()))}
+
+
+# ------------------------------------------------------------ cell builder
+
+def _cast_serve(tree):
+    """Serve params: residual fp32 leaves (embeddings, norms, head) -> bf16."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+        if hasattr(x, "dtype") and x.dtype == jnp.float32 else x, tree)
+
+
+def build_cell(arch: str, shape_name: str, *, radix: int = 7,
+               use_chunked: bool = True, seq_shard: bool = False,
+               kv_bits=None, remat_policy: str = "nothing"):
+    """Returns (fn, abstract_inputs, sharding_fn(mesh) -> in_shardings)."""
+    entry = get_arch(arch)
+    cfg = entry.full
+    shape = SHAPES[shape_name]
+    cfg = dataclasses.replace(
+        cfg,
+        policy=dataclasses.replace(cfg.policy, radix_bits=radix),
+        use_chunked_attn=(shape.kind != "decode") and use_chunked,
+        kv_bits=kv_bits,
+        remat_policy=remat_policy,
+    )
+    specs = input_specs(cfg, shape)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        params = jax.eval_shape(partial(init_params, cfg=cfg),
+                                jax.random.PRNGKey(0))
+        opt = jax.eval_shape(adamw_init, params)
+        state = {"params": params, "opt": opt}
+
+        def train_step(state, batch):
+            (loss, aux), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state["params"], batch, cfg)
+            p2, o2, om = adamw_update(state["params"], grads, state["opt"],
+                                      opt_cfg)
+            return {"params": p2, "opt": o2}, {"loss": loss, **om}
+
+        def shardings(mesh):
+            st = tree_shardings(state, mesh, kind="param")
+            bt = jax.tree.map(lambda s: NamedSharding(
+                mesh, batch_pspec(s.shape, mesh)), specs)
+            return (st, bt)
+
+        return train_step, (state, specs), shardings, cfg, {}
+
+    # serve paths use packed (bit-transposed) weights
+    params_f = jax.eval_shape(partial(init_params, cfg=cfg),
+                              jax.random.PRNGKey(0))
+    sparams = _cast_serve(jax.eval_shape(partial(pack_params, cfg=cfg),
+                                         params_f))
+
+    if shape.kind == "prefill":
+        tgt_len = specs["tokens"].shape[1]
+        extra = cfg.frontend_len if cfg.family == "vlm" else 0
+        max_len = tgt_len + extra + 8
+
+        def serve_prefill(params, batch):
+            return prefill(params, batch, cfg, max_len=max_len)
+
+        def shardings(mesh):
+            pt = tree_shardings(sparams, mesh, kind="param")
+            bt = jax.tree.map(lambda s: NamedSharding(
+                mesh, batch_pspec(s.shape, mesh)), specs)
+            return (pt, bt)
+
+        return serve_prefill, (sparams, specs), shardings, cfg, {}
+
+    # decode: one token against a seq_len cache
+    b, s = shape.global_batch, shape.seq_len
+    src_len = s if cfg.family in ("encdec", "audio") else 0
+    caches = jax.eval_shape(
+        partial(init_caches, cfg=cfg, batch=b, max_len=s, src_len=src_len))
+    tok = specs["tokens"]
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_decode(params, caches, tok, pos):
+        return decode_step(params, caches, tok, pos, cfg)
+
+    def shardings(mesh):
+        pt = tree_shardings(sparams, mesh, kind="param")
+        ct = [tree_shardings(c, mesh, kind="cache") for c in caches]
+        tt = NamedSharding(mesh, batch_pspec(tok.shape, mesh))
+        st = NamedSharding(mesh, P())
+        return (pt, ct, tt, st)
+
+    return (serve_decode, (sparams, caches, tok, pos), shardings, cfg,
+            {"donate_argnums": (1,)})
+
+
+# ------------------------------------------------------------------ runner
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, radix: int = 7,
+             out_dir: str = ART_DIR, force: bool = False, tag: str = "",
+             **cell_kw) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{arch}__{shape_name}__{mesh_kind}__r{radix}{tag}"
+    path = os.path.join(out_dir, name + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "radix": radix, "tag": tag, "ok": False}
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        fn, inputs, shardings, cfg, jit_kw = build_cell(
+            arch, shape_name, radix=radix, **cell_kw)
+        in_sh = shardings(mesh)
+        with mesh, bind_axes(dp=dp_axes_of(mesh), tp="model", mesh=mesh):
+            jitted = jax.jit(fn, in_shardings=in_sh, **jit_kw)
+            lowered = jitted.lower(*inputs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        txt = compiled.as_text()
+        # call-graph roll-up with while-loop trip counts (XLA's own
+        # cost_analysis counts scan bodies once — see hlo_analysis.py)
+        roll = analyze_hlo(txt)
+        n_dev = int(np.prod(list(mesh.shape.values())))
+        rec.update({
+            "ok": True,
+            "n_devices": n_dev,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "xla_flops_raw": float(cost.get("flops", -1)) if cost else -1,
+            "flops": roll.flops,                      # per-device, rolled up
+            "flops_int": roll.flops_int,              # int-dot share (2x peak)
+            "bytes_hbm": roll.bytes_hbm,              # per-device proxy
+            "mem": {k: float(getattr(mem, k, -1)) for k in
+                    ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes")} if mem else {},
+            "collectives": {"bytes": roll.collective_bytes,
+                            "counts": roll.collective_counts,
+                            "total_bytes": roll.total_collective_bytes},
+            "while_trips": roll.while_trips[:32],
+            "hlo_ops": len(txt.splitlines()),
+        })
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["wall_s"] = round(time.time() - t0, 1)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "OK" if rec["ok"] else "FAIL"
+    print(f"[dryrun] {name}: {status} ({rec['wall_s']}s)", flush=True)
+    if not rec["ok"]:
+        print(rec["error"], flush=True)
+    return rec
+
+
+def cells_for(arch: str):
+    return get_arch(arch).shapes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--radix", type=int, default=7)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--kv-bits", type=int, default=None)
+    ap.add_argument("--no-chunked", action="store_true")
+    ap.add_argument("--remat-policy", default="nothing",
+                    choices=["nothing", "dots"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=ART_DIR)
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    ok = True
+    if args.all:
+        for arch in list_archs():
+            for shape in cells_for(arch):
+                for mk in meshes:
+                    rec = run_cell(arch, shape, mk, radix=args.radix,
+                                   out_dir=args.out, force=args.force,
+                                   tag=args.tag, kv_bits=args.kv_bits,
+                                   use_chunked=not args.no_chunked,
+                                   remat_policy=args.remat_policy)
+                    ok &= rec["ok"]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        rec = run_cell(args.arch, args.shape, meshes[0], radix=args.radix,
+                       out_dir=args.out, force=args.force, tag=args.tag,
+                       kv_bits=args.kv_bits,
+                       use_chunked=not args.no_chunked,
+                       remat_policy=args.remat_policy)
+        ok = rec["ok"]
+        if args.mesh == "both":
+            rec = run_cell(args.arch, args.shape, "multi", radix=args.radix,
+                           out_dir=args.out, force=args.force, tag=args.tag,
+                           kv_bits=args.kv_bits,
+                           use_chunked=not args.no_chunked)
+            ok &= rec["ok"]
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,316 @@
+"""Mini HLO cost analyzer with correct while-loop accounting.
+
+``compiled.cost_analysis()`` counts each while-loop *body* once, but our
+models scan over layers — 24..94 iterations — so FLOPs/bytes/collectives
+from XLA are undercounted by ~L×. This module parses the optimized
+(per-device) HLO text, builds the computation call graph, and rolls up
+
+* dot/convolution FLOPs (2·|result|·K),
+* an HBM-traffic proxy (operand + result bytes of computation-level ops;
+  fusion internals excluded — a fusion moves only its operands/results),
+* collective bytes by kind (all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute),
+
+multiplying while bodies by their trip counts (parsed from the loop
+condition's comparison constant). This is the dry-run "profiler" used by
+the roofline table and the §Perf iteration loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HLOCost"]
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "s4": 0.5, "u4": 0.5, "token": 0}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shapes_of(sig: str) -> List[Tuple[str, List[int]]]:
+    return [(d, [int(x) for x in dims.split(",")] if dims else [])
+            for d, dims in _SHAPE_RE.findall(sig)]
+
+
+def _bytes_of(sig: str) -> float:
+    return sum(_DTYPE_BYTES.get(d, 0) * (int(__import__("math").prod(dims))
+                                         if dims else 1)
+               for d, dims in _shapes_of(sig))
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    sig: str          # result type signature text
+    kind: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    params: Dict[str, str]
+    ops: List[_Op]
+    symbols: Dict[str, str]
+
+
+@dataclasses.dataclass
+class HLOCost:
+    flops: float = 0.0
+    flops_int: float = 0.0   # integer-dot FLOPs (int8 MXU path: 2x peak)
+    bytes_hbm: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    while_trips: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+
+_OP_KIND_RE = re.compile(
+    r"^((?:\([^)]*\)|[\w\[\],{}]+)+)\s+([\w\-]+)\(")
+
+
+def _parse(text: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    entry = None
+    cur: Optional[_Comp] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("//"):
+            continue
+        # computation header: [ENTRY] %name (p: type, ...) -> type {
+        m = re.match(r"^(ENTRY\s+)?(%?[\w.\-]+)\s*\((.*)\)\s*->\s*.*\{\s*$",
+                     line)
+        if m and "=" not in line.split("(")[0]:
+            name = m.group(2)
+            params = {}
+            for pm in re.finditer(r"([\w.\-]+)\s*:\s*((?:\([^)]*\)|[^,)]+))",
+                                  m.group(3)):
+                params["%" + pm.group(1)] = pm.group(2)
+            cur = _Comp(name=name, params=params, ops=[],
+                        symbols=dict(params))
+            comps[name] = cur
+            if m.group(1):
+                entry = name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        name, rest = dm.group(1), dm.group(2)
+        km = _OP_KIND_RE.match(rest)
+        if not km:
+            continue
+        sig, kind = km.group(1), km.group(2)
+        after = rest[km.end():]
+        depth = 1
+        i = 0
+        while i < len(after) and depth > 0:
+            if after[i] == "(":
+                depth += 1
+            elif after[i] == ")":
+                depth -= 1
+            i += 1
+        operand_str = after[:i - 1] if i > 0 else ""
+        attrs = after[i:]
+        operands = re.findall(r"%[\w.\-]+", operand_str)
+        cur.symbols[name] = sig
+        cur.ops.append(_Op(name=name, sig=sig, kind=kind, operands=operands,
+                           attrs=attrs))
+    return comps, entry
+
+
+def _dot_flops(op: _Op, comp: _Comp) -> float:
+    import math
+    res = _shapes_of(op.sig)
+    if not res:
+        return 0.0
+    out_elems = math.prod(res[0][1]) if res[0][1] else 1
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    k = 1
+    if cm and op.operands:
+        lhs_sig = comp.symbols.get(op.operands[0], "")
+        lhs_shapes = _shapes_of(lhs_sig)
+        if lhs_shapes:
+            dims = lhs_shapes[0][1]
+            for d in (cm.group(1).split(",") if cm.group(1) else []):
+                di = int(d)
+                if di < len(dims):
+                    k *= dims[di]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: _Op, comp: _Comp) -> float:
+    import math
+    res = _shapes_of(op.sig)
+    if not res or len(op.operands) < 2:
+        return 0.0
+    out_elems = math.prod(res[0][1]) if res[0][1] else 1
+    rhs = _shapes_of(comp.symbols.get(op.operands[1], ""))
+    if not rhs:
+        return 0.0
+    rhs_elems = math.prod(rhs[0][1]) if rhs[0][1] else 1
+    # per output element: kernel_spatial x in_channels MACs = rhs_elems /
+    # out_channels; out_channels = last dim heuristically from dim_labels
+    gm = re.search(r"dim_labels=\w+_(\w+)->", op.attrs)
+    oc = 1
+    if gm:
+        lbl = gm.group(1)
+        pos = lbl.find("o")
+        if pos >= 0 and pos < len(rhs[0][1]):
+            oc = rhs[0][1][pos]
+    fg = re.search(r"feature_group_count=(\d+)", op.attrs)
+    groups = int(fg.group(1)) if fg else 1
+    return 2.0 * out_elems * (rhs_elems / max(oc, 1)) / groups
+
+
+def _called(op: _Op) -> List[str]:
+    out = []
+    for key in ("calls", "body", "condition", "to_apply"):
+        m = re.search(key + r"=(%[\w.\-]+)", op.attrs)
+        if m:
+            out.append((key, m.group(1)))
+    bm = re.search(r"branch_computations=\{([^}]*)\}", op.attrs)
+    if bm:
+        for name in re.findall(r"%[\w.\-]+", bm.group(1)):
+            out.append(("branch", name))
+    return out
+
+
+def analyze_hlo(text: str) -> HLOCost:
+    comps, entry = _parse(text)
+    if entry is None:
+        return HLOCost()
+
+    # scalar integer constants per computation (for while trip counts)
+    comp_consts: Dict[str, List[int]] = {}
+    cur = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        m = re.match(r"^(ENTRY\s+)?(%?[\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$",
+                     line)
+        if m and "=" not in line.split("(")[0]:
+            cur = m.group(2)
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            cm = re.search(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)", line)
+            if cm:
+                comp_consts.setdefault(cur, []).append(int(cm.group(1)))
+
+    def cond_trip(cond_name: str) -> int:
+        vals = []
+        stack, seen = [cond_name], set()
+        while stack:
+            c = stack.pop()
+            if c in seen or c not in comps:
+                continue
+            seen.add(c)
+            vals.extend(comp_consts.get(c, []))
+            for op in comps[c].ops:
+                for _, cal in _called(op):
+                    stack.append(cal)
+        vals = [v for v in vals if 0 < v < 10_000_000]
+        return max(vals) if vals else 1
+
+    memo: Dict[Tuple[str, bool], HLOCost] = {}
+
+    def visit(cname: str, count_bytes: bool) -> HLOCost:
+        key = (cname, count_bytes)
+        if key in memo:
+            return memo[key]
+        comp = comps[cname]
+        cost = HLOCost()
+        memo[key] = cost  # guard (acyclic anyway)
+        for op in comp.ops:
+            if op.kind in ("dot", "dot-general"):
+                f = _dot_flops(op, comp)
+                cost.flops += f
+                if re.match(r"^[su]\d", op.sig.strip()):
+                    cost.flops_int += f
+            elif op.kind == "convolution":
+                cost.flops += _conv_flops(op, comp)
+            base = op.kind.replace("-start", "")
+            if base in _COLLECTIVES and not op.kind.endswith("-done"):
+                nb = _bytes_of(op.sig)
+                cost.collective_bytes[base] += nb
+                cost.collective_counts[base] += 1
+            if count_bytes and op.kind not in ("parameter", "constant",
+                                               "get-tuple-element", "tuple",
+                                               "bitcast"):
+                nb = _bytes_of(op.sig)
+                op_bytes = [_bytes_of(comp.symbols.get(o, ""))
+                            for o in op.operands]
+                nb += sum(op_bytes)
+                # in-place dynamic-update-slice (incl. DUS-rooted fusions,
+                # e.g. KV-cache writes) touches only the update slice, not
+                # the whole aliased buffer: charge ops+result minus the
+                # buffer counted twice
+                is_dus = op.kind == "dynamic-update-slice"
+                if op.kind == "fusion":
+                    called = _called(op)
+                    sub = next((c for k, c in called if k == "calls"), None)
+                    if sub in comps and comps[sub].ops and \
+                            comps[sub].ops[-1].kind == "dynamic-update-slice":
+                        is_dus = True
+                if is_dus and op_bytes:
+                    nb -= 2 * max(op_bytes)
+                    nb = max(nb, 0.0)
+                cost.bytes_hbm += nb
+            # ---- call graph
+            calls = _called(op)
+            if op.kind == "while":
+                body = next((c for k, c in calls if k == "body"), None)
+                cond = next((c for k, c in calls if k == "condition"), None)
+                trips = cond_trip(cond) if cond else 1
+                cost.while_trips.append(trips)
+                for sub, mult in ((body, trips), (cond, trips + 1)):
+                    if sub and sub in comps:
+                        s = visit(sub, count_bytes)
+                        _accumulate(cost, s, mult)
+            elif op.kind == "conditional":
+                branches = [c for k, c in calls if k == "branch"]
+                if branches:
+                    subs = [visit(b, count_bytes) for b in branches
+                            if b in comps]
+                    if subs:  # charge the most expensive branch
+                        s = max(subs, key=lambda c: c.flops + c.bytes_hbm)
+                        _accumulate(cost, s, 1)
+            elif op.kind in ("fusion", "call", "async-start"):
+                for k, cal in calls:
+                    if k in ("calls", "to_apply") and cal in comps:
+                        # fusion internals touch VMEM only: flops yes,
+                        # HBM bytes no (callsite already counted operands)
+                        s = visit(cal, False)
+                        _accumulate(cost, s, 1, bytes_too=False)
+        return cost
+
+    def _accumulate(dst: HLOCost, src: HLOCost, mult: float,
+                    bytes_too: bool = True):
+        dst.flops += src.flops * mult
+        dst.flops_int += src.flops_int * mult
+        if bytes_too:
+            dst.bytes_hbm += src.bytes_hbm * mult
+        for k in _COLLECTIVES:
+            dst.collective_bytes[k] += src.collective_bytes[k] * mult
+            dst.collective_counts[k] += src.collective_counts[k] * mult
+
+    return visit(entry, True)

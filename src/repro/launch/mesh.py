@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is
+data-parallel by default (lowest cross-pod traffic: one gradient
+reduce-scatter per step) and can be repurposed as the pipeline axis — the
+paper's Pipelined mode — via ``distributed/pipeline_parallel.py``.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any device query).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "MESH_AXES"]
+
+MESH_AXES = {"single": ("data", "model"), "multi": ("pod", "data", "model")}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1, pod: int = 1):
+    """Small mesh over whatever devices exist (CPU tests)."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes that shard the batch (DP axes)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

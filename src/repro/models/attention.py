@@ -1,0 +1,452 @@
+"""Attention variants: GQA/MHA (full, chunked-online-softmax, sliding
+window), decode with (optionally int8-quantized) KV caches, and DeepSeek-MLA
+with the compressed-latent cache.
+
+All projections are :func:`repro.models.layers.qdense` — i.e. they run
+through the BARVINN serial path in deployment. Attention score/PV math stays
+high-precision (the paper's pipeline modules after the MVP are also
+high-precision fixed point).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.context import constrain
+from repro.models.layers import (QuantPolicy, apply_rotary, qdense,
+                                 qdense_init, rotary)
+
+__all__ = ["AttnConfig", "attn_init", "attn_apply", "mla_init", "mla_apply",
+           "chunked_attention", "init_kv_cache", "KVQuant"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    partial_rotary: float = 1.0
+    window: Optional[int] = None       # sliding-window width (None = full)
+    causal: bool = True
+    # MLA
+    mla: bool = False
+    kv_lora: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # KV cache quantization (beyond-paper: the serializer applied to KV)
+    kv_bits: Optional[int] = None      # None = bf16 cache; 8 = int8 codes
+
+    @property
+    def rotary_dim(self) -> int:
+        return int(self.head_dim * self.partial_rotary)
+
+
+# --------------------------------------------------------------------- core
+
+def _sdpa_full(q, k, v, *, causal, window, q_offset, softmax_dtype=jnp.float32):
+    """Reference attention (small shapes / decode): q (B,Sq,H,D),
+    k/v (B,Sk,Hkv,D). GQA via head grouping."""
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    qg = q.reshape(b, sq, hkv, rep, d)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg.astype(softmax_dtype),
+                        k.astype(softmax_dtype)) / np.sqrt(d)
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p, v.astype(softmax_dtype))
+    return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                      q_chunk=1024, kv_chunk=1024, skip_masked_blocks=True):
+    """Flash-style online-softmax attention over KV chunks.
+
+    Memory is bounded by one (q_chunk x kv_chunk) score block per head group
+    — required for 32k prefill to fit HBM. With ``skip_masked_blocks`` the
+    kv-chunk scan for each q-chunk covers only blocks that intersect the
+    causal/window mask (upper-triangle blocks are never computed), halving
+    compute for causal masks and making sliding-window linear-cost.
+    """
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    nq = -(-sq // q_chunk)
+    nk = -(-sk // kv_chunk)
+    # pad to chunk multiples
+    qp = nq * q_chunk - sq
+    kp = nk * kv_chunk - sk
+    if qp:
+        q = jnp.pad(q, ((0, 0), (0, qp), (0, 0), (0, 0)))
+    if kp:
+        k = jnp.pad(k, ((0, 0), (0, kp), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kp), (0, 0), (0, 0)))
+    # keep batch DP-sharded and heads TP-sharded through the chunk scans
+    # (GSPMD drops the batch axis through scan carries otherwise)
+    qg = constrain(q.reshape(b, nq, q_chunk, hkv, rep, d),
+                   "dp", None, None, "tp", None, None)
+    kg = constrain(k.reshape(b, nk, kv_chunk, hkv, d),
+                   "dp", None, None, "tp", None)
+    vg = constrain(v.reshape(b, nk, kv_chunk, hkv, d),
+                   "dp", None, None, "tp", None)
+    scale = 1.0 / np.sqrt(d)
+
+    def q_block(qi: int):
+        # q chunks are a static Python loop so each one scans exactly the KV
+        # blocks its mask needs — causal upper-triangle blocks and blocks
+        # outside the sliding window are never lowered at all (the block-
+        # skipping shows up directly in XLA's FLOP count).
+        qtile = qg[:, qi]  # (b, q_chunk, hkv, rep, d)
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            ktile = jax.lax.dynamic_index_in_dim(kg, ki, 1, keepdims=False)
+            vtile = jax.lax.dynamic_index_in_dim(vg, ki, 1, keepdims=False)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qtile.astype(jnp.float32),
+                           ktile.astype(jnp.float32)) * scale
+            mask = (kpos[None, :] < sk)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bgrqk,bkgd->bgrqd", p, vtile.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        lo, hi = 0, nk
+        if skip_masked_blocks and q_offset == 0:
+            if causal:
+                hi = min(((qi + 1) * q_chunk + kv_chunk - 1) // kv_chunk, nk)
+            if window is not None:
+                lo = max(0, (qi * q_chunk - window) // kv_chunk)
+        m0 = constrain(jnp.full((b, hkv, rep, q_chunk), -1e30, jnp.float32),
+                       "dp", "tp", None, None)
+        l0 = constrain(jnp.zeros((b, hkv, rep, q_chunk), jnp.float32),
+                       "dp", "tp", None, None)
+        a0 = constrain(jnp.zeros((b, hkv, rep, q_chunk, d), jnp.float32),
+                       "dp", "tp", None, None, None)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(lo, hi))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out  # (b, hkv, rep, q_chunk, d)
+
+    out = jnp.stack([q_block(qi) for qi in range(nq)], axis=1)
+    out = jnp.transpose(out, (0, 1, 4, 2, 3, 5)).reshape(
+        b, nq * q_chunk, h, d)
+    return out[:, :sq].astype(q.dtype)
+
+
+def _sdpa_rolling(q, k, v, filled, softmax_dtype=jnp.float32):
+    """Decode attention over a rolling window buffer: the last ``filled``
+    slots are valid (all strictly in the causal past of the query)."""
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    qg = q.reshape(b, sq, hkv, rep, d)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg.astype(softmax_dtype),
+                        k.astype(softmax_dtype)) / np.sqrt(d)
+    valid = jnp.arange(sk)[None, :] >= (sk - filled)
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p, v.astype(softmax_dtype))
+    return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ KV cache
+
+@dataclasses.dataclass(frozen=True)
+class KVQuant:
+    bits: int = 8
+
+
+def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                  kv_bits: Optional[int] = None, dtype=jnp.bfloat16,
+                  window: Optional[int] = None) -> dict:
+    """Decode cache. With ``kv_bits=8`` the cache stores int8 codes + per
+    (pos, head) scales — the quantizer/serializer applied to the KV stream
+    (cuts decode HBM traffic by 2x vs bf16). With ``window`` the cache is a
+    rolling buffer of only ``window`` slots (sliding-window attention keeps
+    memory O(window), not O(context))."""
+    size = max_len if window is None else min(max_len, window)
+    if kv_bits is None:
+        cache = {
+            "k": jnp.zeros((batch, size, n_kv, head_dim), dtype),
+            "v": jnp.zeros((batch, size, n_kv, head_dim), dtype),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    else:
+        assert kv_bits == 8
+        cache = {
+            "k_q": jnp.zeros((batch, size, n_kv, head_dim), jnp.int8),
+            "v_q": jnp.zeros((batch, size, n_kv, head_dim), jnp.int8),
+            "k_s": jnp.zeros((batch, size, n_kv), jnp.float32),
+            "v_s": jnp.zeros((batch, size, n_kv), jnp.float32),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    if window is not None and window <= max_len:
+        cache["rolling"] = jnp.zeros((), jnp.int32)  # structural marker
+    return cache
+
+
+def _quant_kv(x):
+    # per (batch, pos, head) absmax int8
+    s = jnp.max(jnp.abs(x), axis=-1).astype(jnp.float32) / 127.0 + 1e-9
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]), -127, 127)
+    return q.astype(jnp.int8), s
+
+
+def _roll_insert(buf, new):
+    """Shift a rolling buffer left by the update length and append at the
+    end; if the update exceeds the buffer, keep its tail."""
+    w, s = buf.shape[1], new.shape[1]
+    new = new.astype(buf.dtype)
+    if s >= w:
+        return new[:, -w:]
+    return jnp.concatenate([buf[:, s:], new], axis=1)
+
+
+def update_kv_cache(cache: dict, k_new, v_new, pos) -> dict:
+    """Insert new K/V at ``pos`` (scalar int). Works for prefill (S>1) and
+    decode (S=1); rolling (sliding-window) caches shift instead of index."""
+    upd = dict(cache)
+    rolling = "rolling" in cache
+    if "k" in cache:
+        if rolling:
+            upd["k"] = _roll_insert(cache["k"], k_new)
+            upd["v"] = _roll_insert(cache["v"], v_new)
+        else:
+            upd["k"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k_new.astype(cache["k"].dtype), pos, 1)
+            upd["v"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v_new.astype(cache["v"].dtype), pos, 1)
+    else:
+        kq, ks = _quant_kv(k_new)
+        vq, vs = _quant_kv(v_new)
+        if rolling:
+            upd["k_q"] = _roll_insert(cache["k_q"], kq)
+            upd["v_q"] = _roll_insert(cache["v_q"], vq)
+            upd["k_s"] = _roll_insert(cache["k_s"], ks)
+            upd["v_s"] = _roll_insert(cache["v_s"], vs)
+        else:
+            upd["k_q"] = jax.lax.dynamic_update_slice_in_dim(cache["k_q"], kq, pos, 1)
+            upd["v_q"] = jax.lax.dynamic_update_slice_in_dim(cache["v_q"], vq, pos, 1)
+            upd["k_s"] = jax.lax.dynamic_update_slice_in_dim(cache["k_s"], ks, pos, 1)
+            upd["v_s"] = jax.lax.dynamic_update_slice_in_dim(cache["v_s"], vs, pos, 1)
+    upd["len"] = pos + k_new.shape[1]
+    return upd
+
+
+def read_kv_cache(cache: dict, dtype=jnp.bfloat16):
+    if "k" in cache:
+        return cache["k"], cache["v"]
+    k = cache["k_q"].astype(jnp.float32) * cache["k_s"][..., None]
+    v = cache["v_q"].astype(jnp.float32) * cache["v_s"][..., None]
+    return k.astype(dtype), v.astype(dtype)
+
+
+# ------------------------------------------------------------- GQA attention
+
+def attn_init(key, cfg: AttnConfig, policy: QuantPolicy) -> dict:
+    ks = jax.random.split(key, 4)
+    h, hkv, dh, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    return {
+        "wq": qdense_init(ks[0], d, h * dh, policy, bias=cfg.qkv_bias),
+        "wk": qdense_init(ks[1], d, hkv * dh, policy, bias=cfg.qkv_bias),
+        "wv": qdense_init(ks[2], d, hkv * dh, policy, bias=cfg.qkv_bias),
+        "wo": qdense_init(ks[3], h * dh, d, policy),
+    }
+
+
+def attn_apply(p: dict, x: jax.Array, cfg: AttnConfig, policy: QuantPolicy,
+               *, positions=None, cache: Optional[dict] = None,
+               cache_pos=None, use_chunked: bool = False,
+               q_chunk=1024, kv_chunk=1024,
+               cross_kv: Optional[tuple] = None) -> tuple:
+    """Returns (out, new_cache). ``cross_kv=(k,v)`` switches to cross
+    attention (encoder-decoder): no rope on kv, no cache update."""
+    b, s, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = qdense(p["wq"], x, policy).reshape(b, s, h, dh)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if cross_kv is None:
+        k = qdense(p["wk"], x, policy).reshape(b, s, hkv, dh)
+        v = qdense(p["wv"], x, policy).reshape(b, s, hkv, dh)
+        rd = cfg.rotary_dim
+        if rd > 0:
+            cos, sin = rotary(positions, rd, cfg.rope_theta)
+            q = apply_rotary(q, cos, sin, rd)
+            k = apply_rotary(k, cos, sin, rd)
+    else:
+        k, v = cross_kv
+        rd = 0
+    new_cache = None
+    q_offset = 0
+    if cache is not None:
+        new_cache = update_kv_cache(cache, k, v, cache_pos)
+        if s > 1 and use_chunked and cache_pos == 0:
+            # prefill: the cache was empty, so attention over the FRESH
+            # K/V with causal(+window) masks is exact — and chunked, so no
+            # S x S score tensor is ever materialized (at 32k context the
+            # full matrix is 4 GiB per head-group per layer)
+            out = chunked_attention(q, k, v,
+                                    causal=cfg.causal and cross_kv is None,
+                                    window=cfg.window, q_chunk=q_chunk,
+                                    kv_chunk=kv_chunk)
+        elif "rolling" in cache:
+            if s == 1:
+                # decode: rolling buffer holds the last `filled` tokens,
+                # newest at the end — all in the causal past of the query
+                kc, vc = read_kv_cache(new_cache, x.dtype)
+                filled = jnp.minimum(cache_pos + s, kc.shape[1])
+                out = _sdpa_rolling(q, kc, vc, filled)
+            else:
+                # windowed prefill: attend the fresh K/V with causal+window
+                # masks; the rolling cache is seeded for subsequent decode
+                out = _sdpa_full(q, k, v, causal=cfg.causal,
+                                 window=cfg.window, q_offset=0)
+        else:
+            kc, vc = read_kv_cache(new_cache, x.dtype)
+            out = _sdpa_full(q, kc, vc, causal=cfg.causal, window=cfg.window,
+                             q_offset=cache_pos)
+    elif use_chunked:
+        out = chunked_attention(q, k, v, causal=cfg.causal and cross_kv is None,
+                                window=cfg.window, q_chunk=q_chunk,
+                                kv_chunk=kv_chunk)
+    else:
+        out = _sdpa_full(q, k, v, causal=cfg.causal and cross_kv is None,
+                         window=cfg.window, q_offset=0)
+    out = qdense(p["wo"], out.reshape(b, s, h * dh), policy)
+    return out, new_cache
+
+
+# ------------------------------------------------------------------ MLA
+
+def mla_init(key, cfg: AttnConfig, policy: QuantPolicy) -> dict:
+    ks = jax.random.split(key, 6)
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv, lora = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora
+    return {
+        "wq": qdense_init(ks[0], d, h * (dn + dr), policy),
+        "w_dkv": qdense_init(ks[1], d, lora + dr, policy),
+        "w_uk": qdense_init(ks[2], lora, h * dn, policy),
+        "w_uv": qdense_init(ks[3], lora, h * dv, policy),
+        "wo": qdense_init(ks[4], h * dv, d, policy),
+        "kv_norm": jnp.ones((lora,), jnp.float32),
+    }
+
+
+def mla_apply(p: dict, x: jax.Array, cfg: AttnConfig, policy: QuantPolicy, *,
+              positions=None, cache: Optional[dict] = None, cache_pos=None,
+              use_chunked: bool = False, q_chunk=1024, kv_chunk=1024) -> tuple:
+    """DeepSeek MLA. Cache stores the compressed latent (kv_lora + rope_dim
+    per token — 7x smaller than GQA for deepseek-v2-lite) and decode uses the
+    absorbed-projection form (q absorbed into W_uk / output into W_uv)."""
+    from repro.models.layers import rms_norm
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv, lora = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q = qdense(p["wq"], x, policy).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    ckv = qdense(p["w_dkv"], x, policy)  # (b, s, lora+dr)
+    c, k_rope = ckv[..., :lora], ckv[..., lora:]
+    c = rms_norm(c, p["kv_norm"])
+    cos, sin = rotary(positions, dr, cfg.rope_theta)
+    q_rope = apply_rotary(q_rope, cos, sin, dr)
+    k_rope = apply_rotary(k_rope[..., None, :], cos, sin, dr)[..., 0, :]
+
+    if cache is not None and s > 1 and cache_pos == 0:
+        # prefill: seed the latent cache, but compute attention through the
+        # chunked materialized path (no S x S score tensor)
+        upd = dict(cache)
+        upd["c"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["c"], c.astype(cache["c"].dtype), 0, 1)
+        upd["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), 0, 1)
+        upd["len"] = jnp.asarray(s, jnp.int32)
+        cache = None
+        prefill_cache = upd
+    else:
+        prefill_cache = None
+
+    if cache is not None:  # decode: absorbed form over the latent cache
+        upd = dict(cache)
+        upd["c"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["c"], c.astype(cache["c"].dtype), cache_pos, 1)
+        upd["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), cache_pos, 1)
+        upd["len"] = cache_pos + s
+        c_all = upd["c"]          # (b, S, lora)
+        kr_all = upd["k_rope"]    # (b, S, dr)
+        wuk = p["w_uk"]["w"].reshape(lora, h, dn)
+        q_c = jnp.einsum("bshd,lhd->bshl", q_nope.astype(jnp.float32),
+                         wuk.astype(jnp.float32))
+        scores = (jnp.einsum("bshl,btl->bhst", q_c, c_all.astype(jnp.float32))
+                  + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                               kr_all.astype(jnp.float32)))
+        scores = scores / np.sqrt(dn + dr)
+        kpos = jnp.arange(c_all.shape[1])[None, :]
+        qpos = cache_pos + jnp.arange(s)[:, None]
+        mask = kpos <= qpos
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        pattn = jax.nn.softmax(scores, axis=-1)
+        ctx_c = jnp.einsum("bhst,btl->bshl", pattn, c_all.astype(jnp.float32))
+        wuv = p["w_uv"]["w"].reshape(lora, h, dv)
+        out_v = jnp.einsum("bshl,lhv->bshv", ctx_c, wuv.astype(jnp.float32))
+        out = qdense(p["wo"], out_v.reshape(b, s, h * dv).astype(x.dtype),
+                     policy)
+        return out, upd
+
+    # train / prefill: materialize per-head K, V from the latent
+    k_nope = qdense(p["w_uk"], c, policy).reshape(b, s, h, dn)
+    vfull = qdense(p["w_uv"], c, policy).reshape(b, s, h, dv)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))],
+        axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    if use_chunked:
+        # pad v to qk dim for the shared kernel, then slice
+        vpad = jnp.pad(vfull, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+        out = chunked_attention(qfull, k, vpad, causal=True,
+                                q_chunk=q_chunk, kv_chunk=kv_chunk)[..., :dv]
+    else:
+        out = _sdpa_full(qfull, k, vfull, causal=True, window=None, q_offset=0)
+    out = qdense(p["wo"], out.reshape(b, s, h * dv), policy)
+    return out, prefill_cache
+
+
+def init_mla_cache(batch: int, max_len: int, cfg: AttnConfig,
+                   dtype=jnp.bfloat16) -> dict:
+    return {
+        "c": jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }

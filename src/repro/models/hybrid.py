@@ -1,0 +1,78 @@
+"""Hymba-style hybrid-head layer: attention heads and SSM heads run in
+parallel on the same input, their (normalized) outputs are mean-fused with
+learnable per-branch output scales (Hymba, arXiv:2411.13676).
+
+Most layers use sliding-window attention (sub-quadratic — qualifies the arch
+for ``long_500k``); a few designated global layers use full attention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (AttnConfig, attn_apply, attn_init,
+                                    init_kv_cache)
+from repro.models.layers import QuantPolicy, rms_norm
+from repro.models.ssm import (SSMConfig, init_ssm_cache, ssm_apply,
+                              ssm_decode_step, ssm_init)
+
+__all__ = ["HybridConfig", "hybrid_init", "hybrid_apply", "init_hybrid_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    attn: AttnConfig
+    ssm: SSMConfig
+
+
+def hybrid_init(key, cfg: HybridConfig, policy: QuantPolicy) -> dict:
+    k1, k2 = jax.random.split(key)
+    d = cfg.attn.d_model
+    return {
+        "attn": attn_init(k1, cfg.attn, policy),
+        "ssm": ssm_init(k2, cfg.ssm, policy),
+        "norm_attn": jnp.ones((d,), jnp.float32),
+        "norm_ssm": jnp.ones((d,), jnp.float32),
+        "beta_attn": jnp.ones((d,), jnp.float32),
+        "beta_ssm": jnp.ones((d,), jnp.float32),
+    }
+
+
+def hybrid_apply(p: dict, x: jax.Array, cfg: HybridConfig,
+                 policy: QuantPolicy, *, positions=None,
+                 cache: Optional[dict] = None, cache_pos=None,
+                 use_chunked: bool = False, decode: bool = False,
+                 q_chunk: int = 1024, kv_chunk: int = 1024) -> tuple:
+    """Returns (out, new_cache)."""
+    a_cache = cache.get("attn") if cache is not None else None
+    s_cache = cache.get("ssm") if cache is not None else None
+    attn_out, a_new = attn_apply(p["attn"], x, cfg.attn, policy,
+                                 positions=positions, cache=a_cache,
+                                 cache_pos=cache_pos, use_chunked=use_chunked,
+                                 q_chunk=q_chunk, kv_chunk=kv_chunk)
+    if decode:
+        ssm_out, s_new = ssm_decode_step(p["ssm"], x, cfg.ssm, policy, s_cache)
+    else:
+        ssm_out, s_new = ssm_apply(p["ssm"], x, cfg.ssm, policy, cache=s_cache)
+    fused = 0.5 * (rms_norm(attn_out, p["norm_attn"]) * p["beta_attn"]
+                   + rms_norm(ssm_out, p["norm_ssm"]) * p["beta_ssm"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"attn": a_new, "ssm": s_new}
+    return fused.astype(x.dtype), new_cache
+
+
+def init_hybrid_cache(batch: int, max_len: int, cfg: HybridConfig,
+                      dtype=jnp.bfloat16) -> dict:
+    # SWA layers keep a rolling `window`-slot buffer; global layers the full
+    # context — O(window) memory is what makes 500k-context decode viable
+    return {
+        "attn": init_kv_cache(batch, max_len, cfg.attn.n_kv_heads,
+                              cfg.attn.head_dim, kv_bits=cfg.attn.kv_bits,
+                              dtype=dtype, window=cfg.attn.window),
+        "ssm": init_ssm_cache(batch, cfg.ssm, dtype=dtype),
+    }

@@ -1,0 +1,173 @@
+"""Quantization-aware building blocks shared by every architecture.
+
+Every matmul-bearing layer goes through :func:`qdense` which supports three
+modes (the BARVINN deployment flow):
+
+* ``none``   — plain bf16/f32 matmul (first/last layers, norms),
+* ``qat``    — LSQ fake-quant on weights and activations (``train_step``),
+* ``serial`` — the real integer path: runtime activation quantization →
+  bit/digit-serial matmul over **bit-transposed packed weights** →
+  scaler/bias dequant (``serve_step``). Weight bytes in HBM scale with
+  ``w_bits``.
+
+Parameters are plain dict pytrees. Layer stacks store leaves with a leading
+``(L, ...)`` axis and run under ``jax.lax.scan``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitops
+from repro.core.bitserial import SerialSpec, serial_matmul_packed
+from repro.core.quant import (QuantSpec, init_alpha, lsq_fake_quant,
+                              quantize_int, qrange)
+
+__all__ = ["QuantPolicy", "qdense_init", "qdense", "pack_qdense",
+           "rms_norm", "layer_norm", "rotary", "apply_rotary",
+           "DEFAULT_POLICY"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Per-layer-class precision policy (the per-MVU CSR precision settings).
+
+    ``mode``: 'none' | 'qat' | 'serial'. ``radix_bits`` selects faithful
+    bit-serial (1) vs MXU digit-serial (7/8) for the serial path.
+    """
+
+    mode: str = "none"
+    w_bits: int = 4
+    a_bits: int = 8
+    w_signed: bool = True
+    a_signed: bool = True
+    radix_bits: int = 7
+    backend: str = "xla"  # 'xla' for dry-run/CPU; 'pallas' on real TPU
+
+    def spec(self) -> SerialSpec:
+        return SerialSpec(self.a_bits, self.w_bits, self.a_signed,
+                          self.w_signed, self.radix_bits)
+
+
+DEFAULT_POLICY = QuantPolicy()
+
+
+def qdense_init(key, k: int, n: int, policy: QuantPolicy, *, bias: bool = False,
+                dtype=jnp.float32, scale: Optional[float] = None) -> dict:
+    """Float (training) parameters of a quant-aware dense layer."""
+    std = scale if scale is not None else 1.0 / np.sqrt(k)
+    p = {"w": jax.random.normal(key, (k, n), dtype) * std}
+    if bias:
+        p["b"] = jnp.zeros((n,), dtype)
+    if policy.mode == "qat":
+        # LSQ learnable step sizes: per-out-channel for w, per-tensor for acts
+        _, qpw = qrange(policy.w_bits, policy.w_signed)
+        _, qpa = qrange(policy.a_bits, policy.a_signed)
+        p["alpha_w"] = jnp.full((1, n), 2.0 * std / np.sqrt(max(qpw, 1)), dtype)
+        p["alpha_a"] = jnp.asarray(2.0 / np.sqrt(max(qpa, 1)), dtype)
+    return p
+
+
+def qdense(p: dict, x: jax.Array, policy: QuantPolicy) -> jax.Array:
+    """Apply a quant-aware dense layer; dispatches on param structure."""
+    if "w_packed" in p:  # deployment params (serial path)
+        spec = policy.spec()
+        codes = quantize_int(x, p["alpha_a"], QuantSpec(policy.a_bits,
+                                                        policy.a_signed))
+        acc = serial_matmul_packed(codes, p["w_packed"], spec=spec,
+                                   k=x.shape[-1])
+        out = acc.astype(x.dtype) * (p["scale"] * p["alpha_a"]).astype(x.dtype)
+        if "b" in p:
+            out = out + p["b"].astype(x.dtype)
+        return out
+    w = p["w"]
+    if policy.mode == "qat" and "alpha_w" in p:
+        wspec = QuantSpec(policy.w_bits, policy.w_signed, per_channel=True)
+        aspec = QuantSpec(policy.a_bits, policy.a_signed)
+        w = lsq_fake_quant(w, p["alpha_w"].astype(w.dtype), wspec)
+        x = lsq_fake_quant(x, p["alpha_a"].astype(x.dtype), aspec)
+    out = jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+    if "b" in p:
+        out = out + p["b"].astype(x.dtype)
+    return out
+
+
+def pack_qdense(p: dict, policy: QuantPolicy) -> dict:
+    """Export float params → deployment params (the code generator's weight
+    pre-processing): packed bit-transposed codes + fused scales.
+
+    Works on single weights (K, N) and on scan-stacked weights (L, K, N) /
+    batched expert weights (E, K, N) — the packed result keeps leading axes
+    first: (..., w_bits, ceil(K/32), N).
+    """
+    w = p["w"]
+    n = w.shape[-1]
+    wspec = QuantSpec(policy.w_bits, policy.w_signed, per_channel=True)
+    alpha_w = p.get("alpha_w")
+    if alpha_w is None:
+        alpha_w = init_alpha(w, wspec, axis=-2)
+    alpha_w = jnp.maximum(jnp.abs(alpha_w), 1e-8)
+    alpha_w = jnp.broadcast_to(alpha_w, w.shape[:-2] + (1, n))
+    codes = quantize_int(w, alpha_w, wspec)
+    planes = bitops.pad_to(bitops.to_bitplanes(codes, wspec.bits), 32, axis=-2)
+    # (bits, ..., ceil(K/32)*32? no: pad then pack) -> move bits after lead axes
+    packed = bitops.pack_bitplanes(planes, axis=-2)  # (bits, ..., Kw, N)
+    packed = jnp.moveaxis(packed, 0, w.ndim - 2)     # (..., bits, Kw, N)
+    out = {
+        "w_packed": packed,
+        "scale": alpha_w[..., 0, :].astype(jnp.float32),   # (..., N)
+        "alpha_a": jnp.asarray(p.get("alpha_a", 0.05), jnp.float32),
+    }
+    if "b" in p:
+        out["b"] = p["b"]
+    return out
+
+
+# ---------------------------------------------------------------- norms/rope
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def rotary(positions: jax.Array, dim: int, theta: float = 10000.0,
+           dtype=jnp.float32):
+    """Rotary cos/sin tables for ``positions`` (any shape) over ``dim``."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rotary(x: jax.Array, cos: jax.Array, sin: jax.Array,
+                 rotary_dim: Optional[int] = None) -> jax.Array:
+    """Apply rotary embedding to (..., S, H, Dh); supports partial rotary."""
+    d = x.shape[-1]
+    rd = rotary_dim or d
+    xr, xp = x[..., :rd], x[..., rd:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    # cos/sin: (..., S, rd/2) -> broadcast over heads
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    o1 = x1 * c - x2 * s
+    o2 = x2 * c + x1 * s
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    if rd < d:
+        out = jnp.concatenate([out, xp], axis=-1)
+    return out.astype(x.dtype)

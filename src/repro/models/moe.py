@@ -1,0 +1,242 @@
+"""Mixture-of-Experts with capacity-based scatter dispatch.
+
+Dispatch is the scatter/gather formulation (no GShard one-hot einsums, whose
+dispatch FLOPs would exceed the expert FLOPs at 64–128 experts): tokens are
+ranked within their expert via a cumulative sum over the token axis, dropped
+beyond capacity, scattered into an ``(E, C, d)`` buffer, run through batched
+expert FFNs (one einsum, experts sharded over the ``model``/EP axis), and
+gathered back weighted by their gate values.
+
+Expert weights are quant-aware (:func:`repro.models.layers.qdense` semantics
+vmapped over the expert axis) — BARVINN's per-layer precision knob applies
+per expert, and deployment packs each expert's weights bit-transposed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitserial import serial_matmul_packed
+from repro.core.quant import QuantSpec, lsq_fake_quant, quantize_int, qrange
+from repro.distributed.context import constrain
+from repro.models.layers import QuantPolicy, qdense, qdense_init
+
+__all__ = ["MoEConfig", "moe_init", "moe_apply", "moe_ref_apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff_expert: int
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    norm_topk_prob: bool = True
+    act: str = "swiglu"
+
+
+def _expert_dense_init(key, e: int, k: int, n: int, policy: QuantPolicy):
+    std = 1.0 / np.sqrt(k)
+    p = {"w": jax.random.normal(key, (e, k, n), jnp.float32) * std}
+    if policy.mode == "qat":
+        _, qpw = qrange(policy.w_bits, policy.w_signed)
+        _, qpa = qrange(policy.a_bits, policy.a_signed)
+        p["alpha_w"] = jnp.full((e, 1, n), 2.0 * std / np.sqrt(max(qpw, 1)))
+        p["alpha_a"] = jnp.full((e,), 2.0 / np.sqrt(max(qpa, 1)))
+    return p
+
+
+def moe_init(key, cfg: MoEConfig, policy: QuantPolicy) -> dict:
+    ks = jax.random.split(key, 6)
+    d, f, e = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * 0.02,
+        "w_up": _expert_dense_init(ks[1], e, d, f, policy),
+        "w_down": _expert_dense_init(ks[2], e, f, d, policy),
+    }
+    if cfg.act == "swiglu":
+        p["w_gate"] = _expert_dense_init(ks[3], e, d, f, policy)
+    if cfg.n_shared:
+        fs = cfg.d_ff_shared or f * cfg.n_shared
+        p["shared_up"] = qdense_init(ks[4], d, fs, policy)
+        p["shared_down"] = qdense_init(ks[5], fs, d, policy)
+        if cfg.act == "swiglu":
+            p["shared_gate"] = qdense_init(ks[3], d, fs, policy)
+    return p
+
+
+def _expert_matmul(p: dict, x: jax.Array, policy: QuantPolicy) -> jax.Array:
+    """Batched expert matmul: x (E, C, K) or (G, E, C, K) @ w (E, K, N)."""
+    batched = x.ndim == 4
+    aa = p.get("alpha_a")
+    if aa is not None:
+        aa_b = aa[None, :, None, None] if batched else aa[:, None, None]
+    if "w_packed" in p:
+        spec = policy.spec()
+        codes = quantize_int(x, aa_b,
+                             QuantSpec(policy.a_bits, policy.a_signed))
+        per_e = lambda c, wp: serial_matmul_packed(c, wp, spec=spec,
+                                                   k=x.shape[-1])
+        if batched:
+            acc = jax.vmap(lambda cg: jax.vmap(per_e)(cg, p["w_packed"]))(codes)
+            scale = p["scale"][None, :, None, :]
+        else:
+            acc = jax.vmap(per_e)(codes, p["w_packed"])
+            scale = p["scale"][:, None, :]
+        return acc.astype(x.dtype) * (scale * aa_b).astype(x.dtype)
+    w = p["w"]
+    if policy.mode == "qat" and "alpha_w" in p:
+        wspec = QuantSpec(policy.w_bits, policy.w_signed, per_channel=True)
+        aspec = QuantSpec(policy.a_bits, policy.a_signed)
+        w = lsq_fake_quant(w, p["alpha_w"].astype(w.dtype), wspec)
+        x = lsq_fake_quant(x, aa_b.astype(x.dtype), aspec)
+    if batched:
+        return jnp.einsum("geck,ekn->gecn", x, w.astype(x.dtype))
+    return jnp.einsum("eck,ekn->ecn", x, w.astype(x.dtype))
+
+
+def _act(h, g, kind):
+    if kind == "swiglu":
+        return jax.nn.silu(g) * h
+    if kind == "relu2":
+        r = jnp.maximum(h, 0)
+        return r * r
+    return jax.nn.gelu(h)
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: MoEConfig, policy: QuantPolicy,
+              capacity: Optional[int] = None,
+              n_groups: Optional[int] = None) -> tuple:
+    """x: (..., T, d) — token axis flattened internally. Returns
+    (out, aux_metrics) where aux contains the load-balancing loss.
+
+    Dispatch is **group-local** (GShard-style): tokens are split into
+    ``n_groups`` groups aligned with the DP shards (derived from the bound
+    sharding context by default), each group dispatches into its own
+    ``(E, C_g, d)`` buffer. This keeps the capacity axis DP-sharded — expert
+    compute scales with dp*tp devices, and no global-buffer all-reduce is
+    emitted (§Perf iteration on qwen3-moe: 16x expert-FLOPs/device and
+    ~10x collective-bytes reduction vs the global-buffer formulation)."""
+    from repro.distributed.context import axis_size
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xt = x.reshape(-1, d)
+    t = xt.shape[0]
+    e, k = cfg.n_experts, cfg.top_k
+    if n_groups is None:
+        n_groups = axis_size("dp")
+        if n_groups <= 0 or t % n_groups != 0:
+            n_groups = 1
+    g = n_groups
+    tg = t // g
+    if capacity is None:
+        capacity = int(np.ceil(tg * k / e * cfg.capacity_factor))
+
+    xg = constrain(xt.reshape(g, tg, d), "dp", None, None)
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # (G, Tg, k)
+    if cfg.norm_topk_prob:
+        gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    # rank of each (token, slot) within its expert. Computed WITHOUT the
+    # (G,Tg,k,E) intermediates (275 GB int32 at qwen3 scale): earlier slots
+    # of the same token via a k x k comparison, earlier tokens via a
+    # (G,Tg,E) count cumsum gathered at the chosen expert (§Perf B3).
+    eq = (expert_idx[:, :, :, None] == expert_idx[:, :, None, :])
+    tri = jnp.tril(jnp.ones((k, k), bool), k=-1)
+    slot_in_token = jnp.sum(eq & tri[None, None], axis=-1)    # (G, Tg, k)
+    counts = jnp.zeros((g, tg, e), jnp.int32).at[
+        jnp.arange(g)[:, None, None],
+        jnp.arange(tg)[None, :, None],
+        expert_idx].add(1, mode="drop")
+    prior_tokens = jnp.cumsum(counts, axis=1) - counts        # (G, Tg, E)
+    pos = jnp.take_along_axis(prior_tokens, expert_idx, axis=-1) \
+        + slot_in_token                                       # (G, Tg, k)
+    keep = pos < capacity
+    flat = jnp.where(keep, expert_idx * capacity + pos, e * capacity)
+
+    # dispatch: per-group scatter into (E*C_g+1, d); last row = drop bin
+    def scatter_group(tokens, idx):
+        buf = jnp.zeros((e * capacity + 1, d), tokens.dtype)
+        return buf.at[idx.reshape(-1)].add(
+            jnp.repeat(tokens[:, None], k, 1).reshape(-1, d),
+            mode="drop", indices_are_sorted=False)
+
+    buf = jax.vmap(scatter_group)(xg, flat)                   # (G, E*C+1, d)
+    hbuf = constrain(buf[:, :-1].reshape(g, e, capacity, d),
+                     "dp", "tp", None, None)
+
+    # expert FFN — (G, E, C, d) x (E, d, f): dp x EP sharded einsum
+    up = _expert_matmul(p["w_up"], hbuf, policy)
+    if cfg.act == "swiglu":
+        gate = _expert_matmul(p["w_gate"], hbuf, policy)
+        h = _act(up, gate, "swiglu")
+    else:
+        h = _act(up, None, cfg.act)
+    out_buf = _expert_matmul(p["w_down"], h, policy)          # (G, E, C, d)
+
+    # combine: gather each kept slot, weight by gate value
+    flatc = jnp.minimum(flat, e * capacity)
+    out_flat = jnp.concatenate(
+        [out_buf.reshape(g, e * capacity, d),
+         jnp.zeros((g, 1, d), out_buf.dtype)], axis=1)
+    picked = jax.vmap(lambda of, fl: of[fl.reshape(-1)])(out_flat, flatc)
+    picked = picked.reshape(g, tg, k, d)
+    w = (gate_vals * keep).astype(picked.dtype)
+    out = jnp.einsum("gtkd,gtk->gtd", picked, w).reshape(t, d)
+
+    if cfg.n_shared:
+        su = qdense(p["shared_up"], xt, policy)
+        if cfg.act == "swiglu":
+            sg = qdense(p["shared_gate"], xt, policy)
+            sh = _act(su, sg, "swiglu")
+        else:
+            sh = _act(su, None, cfg.act)
+        out = out + qdense(p["shared_down"], sh, policy)
+
+    # Switch-style load balance loss
+    me = jnp.mean(probs.reshape(t, e), axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx.reshape(t, k)[:, 0], e,
+                                 dtype=jnp.float32), axis=0)
+    aux = {"lb_loss": e * jnp.sum(me * ce),
+           "drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return out.reshape(lead + (d,)), aux
+
+
+def moe_ref_apply(p: dict, x: jax.Array, cfg: MoEConfig,
+                  policy: QuantPolicy) -> jax.Array:
+    """Dense loop-over-experts oracle (no capacity drops) for tests."""
+    lead = x.shape[:-1]
+    xt = x.reshape(-1, x.shape[-1])
+    logits = xt.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.norm_topk_prob:
+        gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+    out = jnp.zeros_like(xt)
+    for ei in range(cfg.n_experts):
+        up = xt @ p["w_up"]["w"][ei]
+        if cfg.act == "swiglu":
+            h = _act(up, xt @ p["w_gate"]["w"][ei], "swiglu")
+        else:
+            h = _act(up, None, cfg.act)
+        oe = h @ p["w_down"]["w"][ei]
+        wsel = jnp.sum(jnp.where(expert_idx == ei, gate_vals, 0.0), axis=-1)
+        out = out + oe * wsel[:, None].astype(oe.dtype)
+    if cfg.n_shared:
+        su = qdense(p["shared_up"], xt, policy)
+        if cfg.act == "swiglu":
+            sh = _act(su, qdense(p["shared_gate"], xt, policy), "swiglu")
+        else:
+            sh = _act(su, None, cfg.act)
+        out = out + qdense(p["shared_down"], sh, policy)
+    return out.reshape(lead + (x.shape[-1],))

@@ -1,0 +1,110 @@
+"""The paper's evaluation models: ResNet9 plain-CNN (CIFAR10) runnable
+end-to-end through the quantized serial pipeline.
+
+This is the model of paper Tables 2/3: residual-distilled ("Plain-CNN", no
+shortcuts), first and last layers kept full precision on the host, all hidden
+convs quantized (default 2-bit weights / 2-bit activations as in Table 3).
+The forward pass uses :func:`repro.core.bitserial.serial_conv2d` — i.e. the
+actual bit-serial arithmetic, not fake quantization — matching what the MVU
+array executes, and is also runnable via the command-stream controller.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitserial import SerialSpec, serial_conv2d
+from repro.core.pipeline_modules import maxpool_relu, relu
+from repro.core.quant import QuantSpec, calibrate, init_alpha, quantize_int
+
+__all__ = ["ResNet9Config", "resnet9_init", "resnet9_forward",
+           "resnet9_forward_float"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNet9Config:
+    num_classes: int = 10
+    a_bits: int = 2
+    w_bits: int = 2
+    radix_bits: int = 7
+    # (name, c_in, c_out, stride, pool_after)
+    layers = (
+        ("conv1", 64, 64, 1, False),
+        ("conv2", 64, 64, 1, False),
+        ("conv3", 64, 128, 2, False),
+        ("conv4", 128, 128, 1, True),   # table in 16x16 -> pooled out 8x8
+        ("conv5", 128, 256, 2, False),
+        ("conv6", 256, 256, 1, True),
+        ("conv7", 256, 512, 2, False),
+        ("conv8", 512, 512, 1, False),
+    )
+
+
+def resnet9_init(key, cfg: ResNet9Config = ResNet9Config()) -> Dict:
+    ks = jax.random.split(key, 12)
+    p = {"conv0": {"w": jax.random.normal(ks[0], (3, 3, 3, 64)) * 0.1}}
+    for i, (name, ci, co, stride, _) in enumerate(cfg.layers):
+        p[name] = {
+            "w": jax.random.normal(ks[i + 1], (3, 3, ci, co)) * (1.0 / np.sqrt(9 * ci)),
+            "scale": jnp.ones((co,), jnp.float32),
+            "bias": jnp.zeros((co,), jnp.float32),
+        }
+    p["fc"] = {"w": jax.random.normal(ks[11], (512, cfg.num_classes)) * 0.05}
+    return p
+
+
+def _quantize_acts(x, bits):
+    spec = QuantSpec(bits, True)
+    alpha = init_alpha(x, spec)
+    return quantize_int(x, alpha, spec), alpha
+
+
+def resnet9_forward(params: Dict, images: jax.Array,
+                    cfg: ResNet9Config = ResNet9Config()) -> jax.Array:
+    """Quantized inference path: conv0 (host, float) → 8 serial-conv stages
+    (integer) → global pool → fc (host, float). images: (N,32,32,3)."""
+    spec = SerialSpec(cfg.a_bits, cfg.w_bits, True, True, cfg.radix_bits)
+    wspec = QuantSpec(cfg.w_bits, True, per_channel=True)
+    # first layer on host in float (paper §4.1)
+    x = jax.lax.conv_general_dilated(
+        images, params["conv0"]["w"].astype(images.dtype), (1, 1),
+        [(1, 1), (1, 1)], dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = relu(x)
+    for name, ci, co, stride, pool in cfg.layers:
+        w = params[name]["w"]
+        aw = init_alpha(w, wspec, axis=(0, 1, 2))
+        wq = quantize_int(w, aw, wspec)
+        xq, ax = _quantize_acts(x, cfg.a_bits)
+        acc = serial_conv2d(xq, wq, spec, stride=stride, padding=1)
+        # scaler + bias pipeline modules (dequant fused into the scale)
+        x = (acc.astype(jnp.float32)
+             * (ax * aw.reshape(1, 1, 1, co) * params[name]["scale"])
+             + params[name]["bias"])
+        if pool:
+            x = maxpool_relu(x, window=2, with_relu=True)
+        else:
+            x = relu(x)
+    x = jnp.mean(x, axis=(1, 2))  # global average pool
+    return x @ params["fc"]["w"]  # last layer on host
+
+
+def resnet9_forward_float(params: Dict, images: jax.Array,
+                          cfg: ResNet9Config = ResNet9Config()) -> jax.Array:
+    """FP32 reference forward (the 'Original'/'Plain-CNN' rows of Table 2)."""
+    x = jax.lax.conv_general_dilated(
+        images, params["conv0"]["w"].astype(images.dtype), (1, 1),
+        [(1, 1), (1, 1)], dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = relu(x)
+    for name, ci, co, stride, pool in cfg.layers:
+        x = jax.lax.conv_general_dilated(
+            x, params[name]["w"].astype(x.dtype), (stride, stride),
+            [(1, 1), (1, 1)], dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = x * params[name]["scale"] + params[name]["bias"]
+        x = maxpool_relu(x, 2, with_relu=True) if pool else relu(x)
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["fc"]["w"]

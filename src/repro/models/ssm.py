@@ -1,0 +1,273 @@
+"""Mamba-2 SSD (state-space duality) layer — chunked matmul formulation.
+
+The recurrence per head (state N, head dim P):
+
+    h_t = a_t * h_{t-1} + (dt_t * B_t) x_t^T        (N x P outer product)
+    y_t = C_t^T h_t + D * x_t
+
+with ``a_t = exp(dt_t * A)``. We use the SSD *chunked* algorithm (Dao & Gu
+2024): within a chunk the output is an attention-like masked matmul
+(MXU-friendly), between chunks a scanned state carry — linear in sequence
+length, which is what qualifies the SSM/hybrid archs for the ``long_500k``
+shape.
+
+BARVINN note (DESIGN.md §Arch-applicability): the recurrence itself is an
+element-wise/state update, not a weight matmul — the serial arbitrary-
+precision technique applies to the in/out/x/B/C/dt projections around it,
+which dominate parameter bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import QuantPolicy, qdense, qdense_init, rms_norm
+
+__all__ = ["SSMConfig", "ssm_init", "ssm_apply", "ssd_scan_ref", "ssd_chunked",
+           "init_ssm_cache", "ssm_decode_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def ssm_init(key, cfg: SSMConfig, policy: QuantPolicy) -> dict:
+    ks = jax.random.split(key, 4)
+    d, di, n, g, h = (cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_groups,
+                      cfg.n_heads)
+    proj_out = 2 * di + 2 * g * n + h  # z, x, B, C, dt
+    p = {
+        "in_proj": qdense_init(ks[0], d, proj_out, policy),
+        "out_proj": qdense_init(ks[1], di, d, policy),
+        "conv_w": jax.random.normal(ks[2], (cfg.d_conv, di + 2 * g * n),
+                                    jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((di + 2 * g * n,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), np.log(np.e - 1), jnp.float32),  # sp^-1(1)
+        "norm": jnp.ones((di,), jnp.float32),
+    }
+    return p
+
+
+def _split_proj(zxbcdt, cfg: SSMConfig):
+    di, n, g, h = cfg.d_inner, cfg.d_state, cfg.n_groups, cfg.n_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    bb = zxbcdt[..., 2 * di:2 * di + g * n]
+    cc = zxbcdt[..., 2 * di + g * n:2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n:]
+    return z, x, bb, cc, dt
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv over (B, S, C); ``state`` (B, d_conv-1, C) for
+    decode. Returns (out, new_state)."""
+    kw = w.shape[0]
+    w = w.astype(x.dtype)
+    b = b.astype(x.dtype)
+    if state is None:
+        pad = jnp.zeros((x.shape[0], kw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(kw))
+    new_state = xp[:, -(kw - 1):] if kw > 1 else None
+    return out + b[None, None], new_state
+
+
+def ssd_chunked(x, dt, a_log, b, c, d_skip, cfg: SSMConfig, h0=None):
+    """Chunked SSD. x (B,S,H,P); dt (B,S,H) post-softplus; b,c (B,S,G,N).
+
+    Returns (y (B,S,H,P), h_final (B,H,N,P))."""
+    bsz, s, h, pdim = x.shape
+    g, n = b.shape[2], b.shape[3]
+    lc = min(cfg.chunk, s)
+    s_orig = s
+    pad = (-s) % lc
+    if pad:
+        # zero padding is exact: dt=0 gives a=exp(0)=1 (state unchanged) and
+        # zero B/C/x contributions; padded outputs are sliced off below
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    nc = s // lc
+    rep = h // g
+    A = -jnp.exp(a_log)                                    # (H,) negative
+    loga = dt * A[None, None, :]                           # (B,S,H) = log a_t
+    xc = x.reshape(bsz, nc, lc, h, pdim)
+    dtc = dt.reshape(bsz, nc, lc, h)
+    lac = loga.reshape(bsz, nc, lc, h)
+    bc_ = b.reshape(bsz, nc, lc, g, n)
+    cc_ = c.reshape(bsz, nc, lc, g, n)
+
+    # intra-chunk cumulative log decay
+    cum = jnp.cumsum(lac, axis=2)                          # (B,nc,lc,H)
+    # decay from tau -> t within chunk: exp(cum_t - cum_tau) for tau <= t
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nc,t,tau,H)
+    tri = jnp.tril(jnp.ones((lc, lc), bool))
+    # mask BEFORE exp: upper-triangle seg is positive and would overflow,
+    # poisoning gradients through where()'s untaken branch
+    decay = jnp.exp(jnp.where(tri[None, None, :, :, None], seg, -1e30))
+
+    # scores(t,tau) = (C_t . B_tau) * decay * dt_tau, grouped heads
+    cb = jnp.einsum("bztgn,bzrgn->bzgtr", cc_.astype(jnp.float32),
+                    bc_.astype(jnp.float32))               # (B,nc,G,t,tau)
+    cb = cb[:, :, :, None]                                 # (B,nc,G,1,t,tau)
+    cb = jnp.broadcast_to(cb, (bsz, nc, g, rep, lc, lc)).reshape(
+        bsz, nc, h, lc, lc)
+    dt_tau = jnp.moveaxis(dtc, -1, 2)[:, :, :, None, :]    # (B,nc,H,1,tau)
+    scores = cb * jnp.moveaxis(decay, -1, 2) * dt_tau
+    y_intra = jnp.einsum("bzhtr,bzrhp->bzthp", scores,
+                         xc.astype(jnp.float32))
+
+    # chunk-level state update terms
+    # state_in contribution: y_inter[t] = C_t . (exp(cum_t) h_in)
+    # h_out = exp(cum_L) h_in + sum_tau exp(cum_L - cum_tau) dt_tau B_tau x_tau^T
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,nc,lc,H)
+    bx = jnp.einsum("bzrgn,bzrhp,bzrh->bzghnp",
+                    bc_.astype(jnp.float32), xc.astype(jnp.float32),
+                    (dtc * decay_out))
+    # bzghnp has g and h; collapse: head h belongs to group h//rep
+    hsel = jnp.arange(h) // rep
+    bx = bx[:, :, hsel, jnp.arange(h)]                     # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,nc,H)
+
+    def scan_fn(hprev, inp):
+        bx_z, dec_z = inp                                  # (B,H,N,P),(B,H)
+        hnew = hprev * dec_z[..., None, None] + bx_z
+        return hnew, hprev
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, pdim), jnp.float32)
+    hfin, hins = jax.lax.scan(scan_fn,
+                              h0,
+                              (jnp.moveaxis(bx, 1, 0),
+                               jnp.moveaxis(chunk_decay, 1, 0)))
+    hins = jnp.moveaxis(hins, 0, 1)                        # (B,nc,H,N,P)
+    cfull = cc_[:, :, :, hsel % g]                         # (B,nc,lc,H,N)
+    y_inter = jnp.einsum("bzthn,bzhnp,bzth->bzthp",
+                         cfull.astype(jnp.float32), hins,
+                         jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(bsz, s, h, pdim)
+    y = y + d_skip[None, None, :, None] * x.astype(jnp.float32)
+    return y[:, :s_orig].astype(x.dtype), hfin
+
+
+def ssd_scan_ref(x, dt, a_log, b, c, d_skip, h0=None):
+    """Step-by-step recurrence oracle (tests)."""
+    bsz, s, h, pdim = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    A = -jnp.exp(a_log)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, pdim), jnp.float32)
+
+    def step(hprev, t):
+        a_t = jnp.exp(dt[:, t] * A[None])                  # (B,H)
+        bt = b[:, t].astype(jnp.float32)                   # (B,G,N)
+        ct = c[:, t].astype(jnp.float32)
+        xt = x[:, t].astype(jnp.float32)                   # (B,H,P)
+        bth = bt[:, jnp.arange(h) // rep]                  # (B,H,N)
+        cth = ct[:, jnp.arange(h) // rep]
+        hnew = (hprev * a_t[..., None, None]
+                + (dt[:, t][..., None, None] * bth[..., None])
+                * xt[:, :, None, :])
+        y = jnp.einsum("bhn,bhnp->bhp", cth, hnew) + d_skip[None, :, None] * xt
+        return hnew, y
+
+    hfin, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), hfin
+
+
+def ssm_apply(p: dict, x: jax.Array, cfg: SSMConfig, policy: QuantPolicy,
+              cache: Optional[dict] = None) -> tuple:
+    """Full sequence forward. Returns (out, new_cache|None)."""
+    bsz, s, _ = x.shape
+    zxbcdt = qdense(p["in_proj"], x, policy)
+    z, xs, bb, cc, dt = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xs, bb, cc], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        conv_in, p["conv_w"], p["conv_b"],
+        None if cache is None else cache.get("conv"))
+    conv_out = jax.nn.silu(conv_out)
+    di = cfg.d_inner
+    g, n = cfg.n_groups, cfg.d_state
+    xs = conv_out[..., :di].reshape(bsz, s, cfg.n_heads, cfg.head_dim)
+    bb = conv_out[..., di:di + g * n].reshape(bsz, s, g, n)
+    cc = conv_out[..., di + g * n:].reshape(bsz, s, g, n)
+    dtv = jax.nn.softplus(dt + p["dt_bias"][None, None])
+    h0 = None if cache is None else cache.get("h")
+    y, hfin = ssd_chunked(xs, dtv, p["A_log"], bb, cc, p["D"], cfg, h0=h0)
+    y = y.reshape(bsz, s, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = qdense(p["out_proj"], y, policy)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": hfin, "conv": conv_state,
+                     "len": cache.get("len", 0) + s}
+    return out, new_cache
+
+
+def init_ssm_cache(batch: int, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.head_dim),
+                       jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner
+                           + 2 * cfg.n_groups * cfg.d_state), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def ssm_decode_step(p: dict, x: jax.Array, cfg: SSMConfig,
+                    policy: QuantPolicy, cache: dict) -> tuple:
+    """Single-token decode: O(1) state update (constant memory — the reason
+    SSM archs run the 500k-context shape)."""
+    bsz = x.shape[0]
+    zxbcdt = qdense(p["in_proj"], x, policy)               # (B,1,proj)
+    z, xs, bb, cc, dt = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xs, bb, cc], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                        cache["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    di, g, n = cfg.d_inner, cfg.n_groups, cfg.d_state
+    h = cfg.n_heads
+    rep = h // g
+    xs = conv_out[..., :di].reshape(bsz, h, cfg.head_dim)
+    bb = conv_out[..., di:di + g * n].reshape(bsz, g, n)
+    cc = conv_out[..., di + g * n:].reshape(bsz, g, n)
+    dtv = jax.nn.softplus(dt[:, 0] + p["dt_bias"][None])   # (B,H)
+    a_t = jnp.exp(dtv * -jnp.exp(p["A_log"])[None])
+    bth = bb[:, jnp.arange(h) // rep].astype(jnp.float32)
+    cth = cc[:, jnp.arange(h) // rep].astype(jnp.float32)
+    hnew = (cache["h"] * a_t[..., None, None]
+            + (dtv[..., None, None] * bth[..., None])
+            * xs.astype(jnp.float32)[:, :, None, :])
+    y = (jnp.einsum("bhn,bhnp->bhp", cth, hnew)
+         + p["D"][None, :, None] * xs.astype(jnp.float32))
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = qdense(p["out_proj"], y, policy)
+    return out, {"h": hnew, "conv": conv_state, "len": cache["len"] + 1}

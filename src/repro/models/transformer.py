@@ -1,0 +1,527 @@
+"""The model zoo assembler: every assigned architecture is an instance of one
+configurable transformer stack (dense GQA / MLA / MoE / SSM / hybrid /
+encoder-decoder / multimodal-stub), with every projection quant-aware.
+
+Layers are grouped into homogeneous runs and executed with ``jax.lax.scan``
+over stacked parameters (compact HLO — essential for compiling 80-94 layer
+configs with 512-way SPMD on this host). Heterogeneous stacks (deepseek's
+dense first layer, hymba's global-attention layers) become multiple groups.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.context import constrain
+from repro.models.attention import (AttnConfig, attn_apply, attn_init,
+                                    init_kv_cache, init_mla_cache, mla_apply,
+                                    mla_init)
+from repro.models.hybrid import (HybridConfig, hybrid_apply, hybrid_init,
+                                 init_hybrid_cache)
+from repro.models.layers import (QuantPolicy, layer_norm, qdense, qdense_init,
+                                 pack_qdense, rms_norm)
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+from repro.models.ssm import (SSMConfig, init_ssm_cache, ssm_apply,
+                              ssm_decode_step, ssm_init)
+
+__all__ = ["ModelConfig", "GroupSpec", "layer_groups", "init_params",
+           "forward", "loss_fn", "prefill", "decode_step", "init_caches",
+           "pack_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense|moe|ssm|hybrid|encdec|vlm|audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    act: str = "swiglu"
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    partial_rotary: float = 1.0
+    norm_type: str = "rms"
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    n_dense_layers: int = 0          # leading dense layers (deepseek)
+    norm_topk_prob: bool = True
+    # MLA
+    mla: bool = False
+    kv_lora: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_groups: int = 1
+    ssm_chunk: int = 128
+    window: Optional[int] = None
+    global_attn_layers: Tuple[int, ...] = ()
+    # encoder-decoder
+    n_enc_layers: int = 0
+    # frontend stub (audio frames / vision patches): embeddings provided
+    frontend: Optional[str] = None
+    frontend_len: int = 0
+    frontend_dim: int = 0
+    # quantization (the paper's knob) + runtime
+    policy: QuantPolicy = QuantPolicy(mode="none")
+    kv_bits: Optional[int] = None
+    remat: bool = True
+    remat_policy: str = "nothing"   # nothing | dots (save matmul outputs)
+    dtype: str = "bfloat16"
+    use_chunked_attn: bool = False
+    attn_q_chunk: int = 1024
+    attn_kv_chunk: int = 1024
+
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def attn_cfg(self, window=None, causal=True) -> AttnConfig:
+        return AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.head_dim,
+            qkv_bias=self.qkv_bias, rope_theta=self.rope_theta,
+            partial_rotary=self.partial_rotary, window=window, causal=causal,
+            mla=self.mla, kv_lora=self.kv_lora, qk_nope_dim=self.qk_nope_dim,
+            qk_rope_dim=self.qk_rope_dim, v_head_dim=self.v_head_dim,
+            kv_bits=self.kv_bits)
+
+    def ssm_cfg(self) -> SSMConfig:
+        return SSMConfig(d_model=self.d_model, d_state=self.ssm_state,
+                         head_dim=self.ssm_head_dim, expand=self.ssm_expand,
+                         n_groups=self.ssm_groups, chunk=self.ssm_chunk)
+
+    def moe_cfg(self) -> MoEConfig:
+        return MoEConfig(d_model=self.d_model, d_ff_expert=self.d_ff_expert,
+                         n_experts=self.n_experts, top_k=self.top_k,
+                         n_shared=self.n_shared_experts,
+                         d_ff_shared=self.n_shared_experts * self.d_ff_expert,
+                         norm_topk_prob=self.norm_topk_prob, act=self.act)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    kind: str          # 'attn' | 'mla' | 'ssm' | 'hybrid'
+    n: int
+    use_moe: bool = False
+    window: Optional[int] = None
+    causal: bool = True
+    cross: bool = False  # decoder cross-attention (enc-dec)
+
+
+def layer_groups(cfg: ModelConfig, decoder: bool = True) -> Tuple[GroupSpec, ...]:
+    """Split the stack into homogeneous scan groups."""
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        return (GroupSpec("ssm", L),)
+    if cfg.family == "hybrid":
+        groups = []
+        prev = 0
+        for gi in sorted(cfg.global_attn_layers):
+            if gi > prev:
+                groups.append(GroupSpec("hybrid", gi - prev, window=cfg.window))
+            groups.append(GroupSpec("hybrid", 1, window=None))
+            prev = gi + 1
+        if prev < L:
+            groups.append(GroupSpec("hybrid", L - prev, window=cfg.window))
+        return tuple(groups)
+    kind = "mla" if cfg.mla else "attn"
+    moe = cfg.n_experts > 0
+    cross = cfg.family in ("encdec", "audio") and decoder
+    if moe and cfg.n_dense_layers > 0:
+        return (GroupSpec(kind, cfg.n_dense_layers, use_moe=False,
+                          cross=cross),
+                GroupSpec(kind, L - cfg.n_dense_layers, use_moe=True,
+                          cross=cross))
+    return (GroupSpec(kind, L, use_moe=moe, window=cfg.window, cross=cross),)
+
+
+# ------------------------------------------------------------------- params
+
+def _mlp_init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    p = {"w_up": qdense_init(ks[0], d, f, cfg.policy),
+         "w_down": qdense_init(ks[1], f, d, cfg.policy)}
+    if cfg.act == "swiglu":
+        p["w_gate"] = qdense_init(ks[2], d, f, cfg.policy)
+    return p
+
+
+def _block_init(key, cfg: ModelConfig, spec: GroupSpec) -> dict:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p = {"norm1": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_type == "layer":
+        p["norm1_b"] = jnp.zeros((d,), jnp.float32)
+    if spec.kind == "ssm":
+        p["ssm"] = ssm_init(ks[0], cfg.ssm_cfg(), cfg.policy)
+        return p
+    if spec.kind == "hybrid":
+        hc = HybridConfig(cfg.attn_cfg(window=spec.window), cfg.ssm_cfg())
+        p["hybrid"] = hybrid_init(ks[0], hc, cfg.policy)
+    elif spec.kind == "mla":
+        p["attn"] = mla_init(ks[0], cfg.attn_cfg(), cfg.policy)
+    else:
+        p["attn"] = attn_init(ks[0], cfg.attn_cfg(window=spec.window),
+                              cfg.policy)
+    if spec.cross:
+        p["cross"] = attn_init(ks[1], cfg.attn_cfg(causal=False), cfg.policy)
+        p["norm_cross"] = jnp.ones((d,), jnp.float32)
+        if cfg.norm_type == "layer":
+            p["norm_cross_b"] = jnp.zeros((d,), jnp.float32)
+    p["norm2"] = jnp.ones((d,), jnp.float32)
+    if cfg.norm_type == "layer":
+        p["norm2_b"] = jnp.zeros((d,), jnp.float32)
+    if spec.use_moe:
+        p["moe"] = moe_init(ks[2], cfg.moe_cfg(), cfg.policy)
+    else:
+        p["mlp"] = _mlp_init(ks[3], cfg)
+    return p
+
+
+def _stack_init(key, cfg: ModelConfig, spec: GroupSpec) -> dict:
+    keys = jax.random.split(key, spec.n)
+    return jax.vmap(lambda k: _block_init(k, cfg, spec))(keys)
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.vocab_size
+    params = {
+        "embed": jax.random.normal(ks[0], (v, d), jnp.float32) * 0.02,
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "groups": [_stack_init(k, cfg, spec) for k, spec in
+                   zip(jax.random.split(ks[1], 16), layer_groups(cfg))],
+    }
+    if cfg.norm_type == "layer":
+        params["final_norm_b"] = jnp.zeros((d,), jnp.float32)
+    if not cfg.tie_embeddings:
+        params["head"] = qdense_init(ks[2], d, v, QuantPolicy(mode="none"))
+    if cfg.family in ("encdec", "audio"):
+        enc_groups = (GroupSpec("attn", cfg.n_enc_layers or cfg.n_layers,
+                                causal=False),)
+        params["enc"] = {
+            "groups": [_stack_init(k, cfg, s) for k, s in
+                       zip(jax.random.split(ks[3], 4), enc_groups)],
+            "final_norm": jnp.ones((d,), jnp.float32),
+        }
+    if cfg.frontend is not None:
+        fd = cfg.frontend_dim or d
+        params["frontend_proj"] = qdense_init(ks[4], fd, d,
+                                              QuantPolicy(mode="none"))
+    return params
+
+
+# ------------------------------------------------------------------ forward
+
+def _norm(x, w, b, cfg: ModelConfig):
+    if cfg.norm_type == "layer":
+        return layer_norm(x, w, b, cfg.norm_eps)
+    return rms_norm(x, w, cfg.norm_eps)
+
+
+def _mlp_apply(p, x, cfg: ModelConfig):
+    up = qdense(p["w_up"], x, cfg.policy)
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(qdense(p["w_gate"], x, cfg.policy)) * up
+    elif cfg.act == "relu2":
+        r = jnp.maximum(up, 0)
+        h = r * r
+    else:
+        h = jax.nn.gelu(up)
+    return qdense(p["w_down"], h, cfg.policy)
+
+
+def _block_apply(p, x, cfg: ModelConfig, spec: GroupSpec, *, positions,
+                 cache=None, cache_pos=None, enc_out=None, decode=False):
+    """One transformer block. Returns (x, new_cache, aux)."""
+    aux = {}
+    x = constrain(x, "dp", "sp", None)   # batch DP, optional seq-sharding
+    h = _norm(x, p["norm1"], p.get("norm1_b"), cfg)
+    if spec.kind == "ssm":
+        if decode:
+            out, new_c = ssm_decode_step(p["ssm"], h, cfg.ssm_cfg(),
+                                         cfg.policy, cache)
+        else:
+            out, new_c = ssm_apply(p["ssm"], h, cfg.ssm_cfg(), cfg.policy,
+                                   cache=cache)
+        return x + out.astype(x.dtype), new_c, aux
+    if spec.kind == "hybrid":
+        hc = HybridConfig(cfg.attn_cfg(window=spec.window), cfg.ssm_cfg())
+        out, new_c = hybrid_apply(p["hybrid"], h, hc, cfg.policy,
+                                  positions=positions, cache=cache,
+                                  cache_pos=cache_pos, decode=decode,
+                                  use_chunked=cfg.use_chunked_attn,
+                                  q_chunk=cfg.attn_q_chunk,
+                                  kv_chunk=cfg.attn_kv_chunk)
+        x = x + out
+    elif spec.kind == "mla":
+        out, new_c = mla_apply(p["attn"], h, cfg.attn_cfg(), cfg.policy,
+                               positions=positions, cache=cache,
+                               cache_pos=cache_pos,
+                               use_chunked=cfg.use_chunked_attn,
+                               q_chunk=cfg.attn_q_chunk,
+                               kv_chunk=cfg.attn_kv_chunk)
+        x = x + out
+    else:
+        acfg = cfg.attn_cfg(window=spec.window, causal=spec.causal)
+        self_cache = cache["self"] if (cache is not None and spec.cross) else cache
+        out, new_self = attn_apply(p["attn"], h, acfg, cfg.policy,
+                                   positions=positions, cache=self_cache,
+                                   cache_pos=cache_pos,
+                                   use_chunked=cfg.use_chunked_attn,
+                                   q_chunk=cfg.attn_q_chunk,
+                                   kv_chunk=cfg.attn_kv_chunk)
+        x = x + out
+        new_c = new_self
+        if spec.cross:
+            hx = _norm(x, p["norm_cross"], p.get("norm_cross_b"), cfg)
+            if enc_out is None and cache is not None and "cross_k" in cache:
+                # decode: encoder K/V were computed at prefill
+                ck, cv = cache["cross_k"], cache["cross_v"]
+            else:
+                acx = cfg.attn_cfg(causal=False)
+                b = enc_out.shape[0]
+                ck = qdense(p["cross"]["wk"], enc_out, cfg.policy).reshape(
+                    b, enc_out.shape[1], acx.n_kv_heads, acx.head_dim)
+                cv = qdense(p["cross"]["wv"], enc_out, cfg.policy).reshape(
+                    b, enc_out.shape[1], acx.n_kv_heads, acx.head_dim)
+            cout, _ = attn_apply(p["cross"], hx, cfg.attn_cfg(causal=False),
+                                 cfg.policy, positions=positions,
+                                 cross_kv=(ck, cv))
+            x = x + cout
+            if cache is not None:
+                new_c = {"self": new_self, "cross_k": ck, "cross_v": cv}
+    hm = _norm(x, p["norm2"], p.get("norm2_b"), cfg)
+    if spec.use_moe:
+        mo, maux = moe_apply(p["moe"], hm, cfg.moe_cfg(), cfg.policy)
+        aux.update(maux)
+        x = x + mo
+    elif "mlp" in p:
+        x = x + _mlp_apply(p["mlp"], hm, cfg)
+    return x, new_c if spec.kind != "ssm" else new_c, aux
+
+
+def _run_groups(groups_params, x, cfg: ModelConfig, specs, *, positions,
+                caches=None, cache_pos=None, enc_out=None, decode=False):
+    """Scan each homogeneous group; returns (x, new_caches, aux_sum)."""
+    new_caches = []
+    aux_tot = {"lb_loss": jnp.zeros((), jnp.float32)}
+
+    for gi, (gp, spec) in enumerate(zip(groups_params, specs)):
+        gcache = caches[gi] if caches is not None else None
+
+        def body(carry, xs):
+            xx = carry
+            pl, cl = xs
+            base = functools.partial(_block_apply, cfg=cfg, spec=spec,
+                                     positions=positions,
+                                     cache_pos=cache_pos,
+                                     enc_out=enc_out, decode=decode)
+            if cfg.remat:
+                pol = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                       if cfg.remat_policy == "dots"
+                       else jax.checkpoint_policies.nothing_saveable)
+                wrapped = jax.checkpoint(
+                    lambda pp, xi, cc: base(pp, xi, cache=cc), policy=pol)
+                xx, nc, aux = wrapped(pl, xx, cl)
+            else:
+                xx, nc, aux = base(pl, xx, cache=cl)
+            return xx, (nc, aux)
+
+        x, (ncs, auxs) = jax.lax.scan(body, x, (gp, gcache))
+        new_caches.append(ncs)
+        if "lb_loss" in auxs:
+            aux_tot["lb_loss"] = aux_tot["lb_loss"] + jnp.sum(auxs["lb_loss"])
+    return x, new_caches, aux_tot
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    """Token / frontend embedding; returns (x, positions)."""
+    dt = cfg.compute_dtype
+    tok = batch["tokens"]
+    x = params["embed"][tok].astype(dt)
+    if cfg.frontend is not None and "frontend_embeds" in batch:
+        fe = qdense(params["frontend_proj"],
+                    batch["frontend_embeds"].astype(dt),
+                    QuantPolicy(mode="none"))
+        x = jnp.concatenate([fe, x], axis=1)
+    positions = jnp.arange(x.shape[1])[None, :]
+    return x, positions
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Full forward to logits. batch: tokens (B,S) [+ frontend_embeds /
+    src_tokens or src_embeds for enc-dec]."""
+    dt = cfg.compute_dtype
+    specs = layer_groups(cfg)
+    enc_out = None
+    if cfg.family in ("encdec", "audio"):
+        if "src_embeds" in batch:
+            src = qdense(params["frontend_proj"],
+                         batch["src_embeds"].astype(dt),
+                         QuantPolicy(mode="none"))
+        else:
+            src = params["embed"][batch["src_tokens"]].astype(dt)
+        enc_specs = (GroupSpec("attn", cfg.n_enc_layers or cfg.n_layers,
+                               causal=False),)
+        pos_e = jnp.arange(src.shape[1])[None, :]
+        enc_out, _, _ = _run_groups(params["enc"]["groups"], src, cfg,
+                                    enc_specs, positions=pos_e)
+        enc_out = rms_norm(enc_out, params["enc"]["final_norm"], cfg.norm_eps)
+        x = params["embed"][batch["tokens"]].astype(dt)
+        positions = jnp.arange(x.shape[1])[None, :]
+    else:
+        x, positions = _embed_inputs(params, batch, cfg)
+    x, _, aux = _run_groups(params["groups"], x, cfg, specs,
+                            positions=positions, enc_out=enc_out)
+    x = _norm(x, params["final_norm"], params.get("final_norm_b"), cfg)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"].astype(x.dtype))
+    else:
+        logits = qdense(params["head"], x, QuantPolicy(mode="none"))
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """Causal LM loss (next-token); enc-dec uses teacher-forced decoder."""
+    logits, aux = forward(params, batch, cfg)
+    labels = batch["labels"]
+    # frontend tokens carry no labels: slice logits to the label length
+    if logits.shape[1] != labels.shape[1]:
+        logits = logits[:, -labels.shape[1]:]
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None].clip(0), axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = ce + 0.01 * aux.get("lb_loss", 0.0)
+    return loss, {"ce": ce, **aux}
+
+
+# ------------------------------------------------------------------ serving
+
+def _group_cache(spec: GroupSpec, cfg: ModelConfig, batch: int, max_len: int,
+                 src_len: int = 0):
+    dt = cfg.compute_dtype
+    if spec.kind == "ssm":
+        c = init_ssm_cache(batch, cfg.ssm_cfg(), dtype=dt)
+    elif spec.kind == "hybrid":
+        hc = HybridConfig(cfg.attn_cfg(window=spec.window), cfg.ssm_cfg())
+        c = init_hybrid_cache(batch, max_len, hc, dtype=dt)
+    elif spec.kind == "mla":
+        c = init_mla_cache(batch, max_len, cfg.attn_cfg(), dtype=dt)
+    else:
+        c = init_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim,
+                          kv_bits=cfg.kv_bits, dtype=dt, window=spec.window)
+        if spec.cross:
+            # cross K/V are filled from the encoder output at prefill
+            c = {"self": c,
+                 "cross_k": jnp.zeros((batch, max(src_len, 1),
+                                       cfg.n_kv_heads, cfg.head_dim), dt),
+                 "cross_v": jnp.zeros((batch, max(src_len, 1),
+                                       cfg.n_kv_heads, cfg.head_dim), dt)}
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (spec.n,) + a.shape), c)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, src_len: int = 0):
+    return [_group_cache(s, cfg, batch, max_len, src_len)
+            for s in layer_groups(cfg)]
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    """Run the prompt, building caches. Returns (last_logits, caches)."""
+    dt = cfg.compute_dtype
+    specs = layer_groups(cfg)
+    enc_out = None
+    if cfg.family in ("encdec", "audio"):
+        if "src_embeds" in batch:
+            src = qdense(params["frontend_proj"],
+                         batch["src_embeds"].astype(dt),
+                         QuantPolicy(mode="none"))
+        else:
+            src = params["embed"][batch["src_tokens"]].astype(dt)
+        enc_specs = (GroupSpec("attn", cfg.n_enc_layers or cfg.n_layers,
+                               causal=False),)
+        pos_e = jnp.arange(src.shape[1])[None, :]
+        enc_out, _, _ = _run_groups(params["enc"]["groups"], src, cfg,
+                                    enc_specs, positions=pos_e)
+        enc_out = rms_norm(enc_out, params["enc"]["final_norm"], cfg.norm_eps)
+        x = params["embed"][batch["tokens"]].astype(dt)
+        positions = jnp.arange(x.shape[1])[None, :]
+    else:
+        x, positions = _embed_inputs(params, batch, cfg)
+    caches = init_caches(cfg, x.shape[0], max_len)
+    x, caches, _ = _run_groups(params["groups"], x, cfg, specs,
+                               positions=positions, caches=caches,
+                               cache_pos=0, enc_out=enc_out)
+    x = _norm(x[:, -1:], params["final_norm"], params.get("final_norm_b"), cfg)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = qdense(params["head"], x, QuantPolicy(mode="none"))
+    return logits[:, 0], caches
+
+
+def decode_step(params, caches, tokens, pos, cfg: ModelConfig):
+    """One token for every sequence in the batch. ``tokens``: (B, 1);
+    ``pos``: scalar int32 position. Returns (logits (B, V), new_caches)."""
+    dt = cfg.compute_dtype
+    specs = layer_groups(cfg)
+    x = params["embed"][tokens].astype(dt)
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    x, caches, _ = _run_groups(params["groups"], x, cfg, specs,
+                               positions=positions, caches=caches,
+                               cache_pos=pos, decode=True)
+    x = _norm(x, params["final_norm"], params.get("final_norm_b"), cfg)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = qdense(params["head"], x, QuantPolicy(mode="none"))
+    return logits[:, 0], caches
+
+
+def pack_params(params, cfg: ModelConfig):
+    """Export float params to the deployment form: every quantized dense
+    becomes bit-transposed packed planes (the code generator weight flow)."""
+    policy = cfg.policy
+    # MLA's absorbed decode multiplies q/ctx through W_uk/W_uv in latent
+    # space on the fly — those two (small) matrices stay unpacked
+    keep_float = {"w_uk", "w_uv"}
+
+    def walk(p, name=""):
+        if isinstance(p, dict):
+            if ("w" in p and hasattr(p["w"], "ndim") and p["w"].ndim >= 2
+                    and p["w"].shape[-1] > 4 and name not in keep_float):
+                return pack_qdense(p, policy)
+            return {k: walk(v, k) for k, v in p.items()}
+        if isinstance(p, list):
+            return [walk(v, name) for v in p]
+        return p
+
+    packed = dict(params)
+    packed["groups"] = [walk(g) for g in params["groups"]]
+    if "enc" in params:
+        packed["enc"] = walk(params["enc"])
+    return packed

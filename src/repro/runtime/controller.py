@@ -1,0 +1,104 @@
+"""Pito analogue: a barrel-scheduled command-stream virtual machine.
+
+The FPGA controller is an 8-hart barrel RV32I CPU; hart *i* programs MVU *i*
+through CSR writes, triggers the job, and sleeps until the completion
+interrupt. We keep exactly those semantics as a software scheduler:
+
+* :class:`BarrelController.simulate` — discrete-event cycle simulation
+  (per-hart issue overhead = ``instrs_per_issue * harts`` cycles, since each
+  hart executes one instruction every 8 clock cycles in the barrel). Feeds
+  the cost model and EXPERIMENTS latency numbers.
+* :class:`BarrelController.execute` — *real* execution: each job's op is
+  dispatched to a registered JAX executor in dependency order, producing
+  actual tensors. Used by tests to run a quantized CNN end-to-end through
+  the command-stream path and compare against the direct forward pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from repro.core.codegen import CommandStream
+from repro.core.mvu import MVUJob, OpKind, MVU_COUNT
+
+__all__ = ["BarrelController", "SimReport"]
+
+
+@dataclasses.dataclass
+class SimReport:
+    makespan_cycles: int
+    per_job_start: List[int]
+    per_job_end: List[int]
+    per_mvu_busy: List[int]
+
+    @property
+    def utilization(self) -> float:
+        if self.makespan_cycles == 0:
+            return 0.0
+        busy = [b for b in self.per_mvu_busy if b > 0]
+        if not busy:
+            return 0.0
+        return sum(busy) / (len(busy) * self.makespan_cycles)
+
+
+class BarrelController:
+    """8 communicating harts, one per MVU (paper §3.2)."""
+
+    def __init__(self, harts: int = MVU_COUNT, instrs_per_issue: int = 8,
+                 freq_hz: float = 250e6):
+        self.harts = harts
+        # every hart turn comes up once per `harts` cycles; programming a job
+        # costs a handful of CSR-write instructions
+        self.issue_overhead = instrs_per_issue * harts
+        self.freq_hz = freq_hz
+        self._executors: Dict[OpKind, Callable] = {}
+
+    # ------------------------------------------------------------------ sim
+    def simulate(self, stream: CommandStream,
+                 xfer_cycles_per_job: int = 64) -> SimReport:
+        jobs = stream.jobs
+        n = len(jobs)
+        start = [0] * n
+        end = [0] * n
+        hart_free = [0] * self.harts
+        busy = [0] * self.harts
+        for i, job in enumerate(jobs):
+            dep_ready = max((end[d] for d in job.depends_on), default=0)
+            if job.op == OpKind.HOST:
+                start[i] = dep_ready
+                end[i] = dep_ready  # host work is off the accelerator clock
+                continue
+            h = job.mvu % self.harts
+            t0 = max(dep_ready, hart_free[h]) + self.issue_overhead
+            dur = job.cycles if job.op != OpKind.XFER else xfer_cycles_per_job
+            start[i] = t0
+            end[i] = t0 + dur
+            hart_free[h] = end[i]
+            busy[h] += dur
+        return SimReport(makespan_cycles=max(end, default=0),
+                         per_job_start=start, per_job_end=end,
+                         per_mvu_busy=busy)
+
+    # ------------------------------------------------------------- real exec
+    def register(self, op: OpKind, fn: Callable) -> None:
+        """``fn(job, env) -> None`` mutates the tensor environment."""
+        self._executors[op] = fn
+
+    def execute(self, stream: CommandStream, env: Dict[str, object]) -> Dict:
+        """Run every job in dependency order against real tensors.
+
+        ``env`` maps tensor names to arrays; executors read/write it. The
+        per-job ``tag`` identifies which layer/tensors a job touches.
+        """
+        done = set()
+        for i, job in enumerate(stream.jobs):
+            missing = [d for d in job.depends_on if d not in done]
+            if missing:
+                raise RuntimeError(
+                    f"job {i} ({job.tag}) scheduled before deps {missing}")
+            fn = self._executors.get(job.op)
+            if fn is not None:
+                fn(job, env)
+            done.add(i)  # completion interrupt
+        return env

@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests: reduced config of the same family runs one
+forward/train step on CPU; output shapes correct, no NaNs (assignment
+requirement (f))."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_REGISTRY, get_arch, list_archs
+from repro.models.transformer import (decode_step, forward, init_params,
+                                      loss_fn, prefill)
+
+
+def _smoke_batch(cfg, rng, b=2, s=16):
+    batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (b, s))),
+             "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (b, s)))}
+    if cfg.family in ("encdec", "audio"):
+        batch["src_embeds"] = jnp.asarray(
+            rng.randn(b, 12, cfg.frontend_dim or cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["frontend_embeds"] = jnp.asarray(
+            rng.randn(b, cfg.frontend_len, cfg.frontend_dim), jnp.float32)
+    return batch
+
+
+ARCHS = list_archs()
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10, ARCHS
+    assert set(ARCHS) == {
+        "seamless-m4t-large-v2", "deepseek-v2-lite-16b",
+        "qwen3-moe-235b-a22b", "mamba2-780m", "command-r-plus-104b",
+        "nemotron-4-15b", "stablelm-1.6b", "qwen1.5-110b", "internvl2-76b",
+        "hymba-1.5b"}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    entry = get_arch(arch)
+    cfg = entry.smoke
+    rng = np.random.RandomState(0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = _smoke_batch(cfg, rng)
+    logits, _ = forward(params, batch, cfg)
+    b = batch["tokens"].shape[0]
+    s_out = batch["tokens"].shape[1] + (cfg.frontend_len if cfg.family == "vlm" else 0)
+    assert logits.shape == (b, s_out, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all(), "NaN/Inf in logits"
+
+    # one SGD train step moves the loss
+    (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, batch, cfg)
+    assert np.isfinite(float(loss))
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+    params2 = jax.tree.map(lambda p, g: p - 0.1 * g.astype(p.dtype),
+                           params, grads)
+    loss2, _ = loss_fn(params2, batch, cfg)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode(arch):
+    entry = get_arch(arch)
+    cfg = entry.smoke
+    rng = np.random.RandomState(1)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    b, s = 2, 12
+    batch = _smoke_batch(cfg, rng, b, s)
+    extra = cfg.frontend_len if cfg.family == "vlm" else 0
+    logits, caches = prefill(params, batch, cfg, max_len=s + extra + 4)
+    assert logits.shape == (b, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    tok = jnp.argmax(logits, -1)[:, None]
+    for t in range(3):
+        logits, caches = decode_step(params, caches, tok,
+                                     jnp.int32(s + extra + t), cfg)
+        tok = jnp.argmax(logits, -1)[:, None]
+        assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_full_configs_match_assignment():
+    """Exact published dims as assigned (spot checks on every arch)."""
+    f = get_arch("seamless-m4t-large-v2").full
+    assert (f.n_layers, f.d_model, f.n_heads, f.d_ff, f.vocab_size) == \
+        (24, 1024, 16, 8192, 256206)
+    f = get_arch("deepseek-v2-lite-16b").full
+    assert (f.n_layers, f.d_model, f.kv_lora, f.n_experts, f.top_k,
+            f.n_shared_experts, f.d_ff_expert, f.vocab_size) == \
+        (27, 2048, 512, 64, 6, 2, 1408, 102400)
+    f = get_arch("qwen3-moe-235b-a22b").full
+    assert (f.n_layers, f.d_model, f.n_heads, f.n_kv_heads, f.n_experts,
+            f.top_k, f.d_ff_expert, f.vocab_size) == \
+        (94, 4096, 64, 4, 128, 8, 1536, 151936)
+    f = get_arch("mamba2-780m").full
+    assert (f.n_layers, f.d_model, f.ssm_state, f.vocab_size) == \
+        (48, 1536, 128, 50280)
+    f = get_arch("command-r-plus-104b").full
+    assert (f.n_layers, f.d_model, f.n_heads, f.n_kv_heads, f.d_ff,
+            f.vocab_size) == (64, 12288, 96, 8, 33792, 256000)
+    f = get_arch("nemotron-4-15b").full
+    assert (f.n_layers, f.d_model, f.n_heads, f.n_kv_heads, f.d_ff,
+            f.vocab_size, f.act) == (32, 6144, 48, 8, 24576, 256000, "relu2")
+    f = get_arch("stablelm-1.6b").full
+    assert (f.n_layers, f.d_model, f.n_heads, f.n_kv_heads, f.d_ff,
+            f.vocab_size) == (24, 2048, 32, 32, 5632, 100352)
+    f = get_arch("qwen1.5-110b").full
+    assert (f.n_layers, f.d_model, f.n_heads, f.n_kv_heads, f.d_ff,
+            f.vocab_size, f.qkv_bias) == (80, 8192, 64, 8, 49152, 152064, True)
+    f = get_arch("internvl2-76b").full
+    assert (f.n_layers, f.d_model, f.n_heads, f.n_kv_heads, f.d_ff,
+            f.vocab_size) == (80, 8192, 64, 8, 28672, 128256)
+    f = get_arch("hymba-1.5b").full
+    assert (f.n_layers, f.d_model, f.n_heads, f.n_kv_heads, f.d_ff,
+            f.vocab_size, f.ssm_state) == (32, 1600, 25, 5, 5504, 32001, 16)
+
+
+def test_long_500k_applicability():
+    """long_500k runs only for sub-quadratic archs, per assignment."""
+    for arch in ARCHS:
+        e = get_arch(arch)
+        if arch in ("mamba2-780m", "hymba-1.5b"):
+            assert "long_500k" in e.shapes
+        else:
+            assert "long_500k" not in e.shapes
+            assert "long_500k" in e.skip_notes

@@ -1,0 +1,140 @@
+"""Cross-path model consistency: decode==forward, chunked==full attention,
+quantized serving matches QAT training expectations, MoE dispatch==oracle."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.attention import chunked_attention, _sdpa_full
+from repro.models.layers import QuantPolicy
+from repro.models.moe import MoEConfig, moe_apply, moe_init, moe_ref_apply
+from repro.models.ssm import SSMConfig, ssd_chunked, ssd_scan_ref
+from repro.models.transformer import (ModelConfig, decode_step, forward,
+                                      init_params, loss_fn, pack_params,
+                                      prefill)
+
+BASE = dict(n_layers=3, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+            d_ff=64, vocab_size=101, dtype="float32", remat=False)
+
+
+def _toks(n=12, b=1, v=101, seed=0):
+    return jnp.asarray(np.random.RandomState(seed).randint(0, v, (b, n)))
+
+
+@pytest.mark.parametrize("family,extra", [
+    ("dense", {}),
+    ("dense", {"mla": True, "kv_lora": 16, "qk_nope_dim": 8,
+               "qk_rope_dim": 4, "v_head_dim": 8}),
+    ("ssm", {"ssm_state": 16, "ssm_head_dim": 8, "ssm_chunk": 4}),
+    ("hybrid", {"ssm_state": 8, "ssm_head_dim": 8, "ssm_chunk": 4,
+                "window": 8, "global_attn_layers": (0,)}),
+])
+def test_decode_matches_forward(family, extra):
+    cfg = ModelConfig(name="t", family=family, **BASE, **extra)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = _toks()
+    full, _ = forward(params, {"tokens": toks,
+                               "labels": jnp.zeros_like(toks)}, cfg)
+    lg, caches = prefill(params, {"tokens": toks[:, :8]}, cfg, max_len=12)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, 7]),
+                               rtol=1e-4, atol=1e-4)
+    for t in range(8, 12):
+        lg, caches = decode_step(params, caches, toks[:, t:t + 1],
+                                 jnp.int32(t), cfg)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, 11]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_attention_property():
+    rng = np.random.RandomState(0)
+    for (b, s, h, hkv, d, w) in [(2, 37, 8, 2, 16, None), (1, 64, 4, 4, 8, 16),
+                                 (1, 33, 2, 1, 4, 7)]:
+        q = jnp.asarray(rng.randn(b, s, h, d), jnp.float32)
+        k = jnp.asarray(rng.randn(b, s, hkv, d), jnp.float32)
+        v = jnp.asarray(rng.randn(b, s, hkv, d), jnp.float32)
+        full = _sdpa_full(q, k, v, causal=True, window=w, q_offset=0)
+        ch = chunked_attention(q, k, v, causal=True, window=w,
+                               q_chunk=8, kv_chunk=8)
+        np.testing.assert_allclose(np.asarray(ch), np.asarray(full),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_moe_matches_oracle_when_capacity_ample():
+    pol = QuantPolicy(mode="none")
+    cfg = MoEConfig(d_model=32, d_ff_expert=16, n_experts=8, top_k=2,
+                    capacity_factor=8.0)
+    p = moe_init(jax.random.PRNGKey(0), cfg, pol)
+    x = jnp.asarray(np.random.RandomState(1).randn(4, 10, 32), jnp.float32)
+    out, aux = moe_apply(p, x, cfg, pol)
+    ref = moe_ref_apply(p, x, cfg, pol)
+    assert float(aux["drop_frac"]) == 0.0
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_moe_capacity_drops_bounded():
+    pol = QuantPolicy(mode="none")
+    cfg = MoEConfig(d_model=16, d_ff_expert=8, n_experts=4, top_k=2,
+                    capacity_factor=1.0)
+    p = moe_init(jax.random.PRNGKey(0), cfg, pol)
+    x = jnp.asarray(np.random.RandomState(2).randn(2, 64, 16), jnp.float32)
+    out, aux = moe_apply(p, x, cfg, pol)
+    assert 0.0 <= float(aux["drop_frac"]) < 0.5
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_ssd_chunked_property():
+    rng = np.random.RandomState(3)
+    for (b, s, h, p, g, n, chunk) in [(1, 16, 2, 4, 1, 8, 4),
+                                      (2, 24, 4, 8, 2, 16, 8),
+                                      (1, 7, 2, 4, 1, 4, 16)]:
+        x = jnp.asarray(rng.randn(b, s, h, p), jnp.float32)
+        dt = jnp.asarray(np.abs(rng.randn(b, s, h)) * 0.5 + 0.05, jnp.float32)
+        a_log = jnp.asarray(rng.randn(h) * 0.3, jnp.float32)
+        bb = jnp.asarray(rng.randn(b, s, g, n) * 0.3, jnp.float32)
+        cc = jnp.asarray(rng.randn(b, s, g, n) * 0.3, jnp.float32)
+        dd = jnp.asarray(rng.randn(h), jnp.float32)
+        cfg = SSMConfig(d_model=h * p, d_state=n, head_dim=p, n_groups=g,
+                        chunk=chunk)
+        y_ref, h_ref = ssd_scan_ref(x, dt, a_log, bb, cc, dd)
+        y, hf = ssd_chunked(x, dt, a_log, bb, cc, dd, cfg)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(hf), np.asarray(h_ref),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_packed_serving_close_to_qat_model():
+    """pack_params -> integer serial forward ~= QAT fake-quant forward."""
+    cfg = ModelConfig(name="q", family="dense",
+                      policy=QuantPolicy(mode="qat", w_bits=8, a_bits=8),
+                      **BASE)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = _toks(10)
+    batch = {"tokens": toks, "labels": jnp.zeros_like(toks)}
+    l_qat, _ = loss_fn(params, batch, cfg)
+    packed = pack_params(params, cfg)
+    l_int, _ = loss_fn(packed, batch, cfg)
+    assert abs(float(l_qat) - float(l_int)) < 0.5, (float(l_qat),
+                                                    float(l_int))
+
+
+def test_radix_invariance_of_serving():
+    """radix-2 (faithful) and radix-2^7 serving produce identical logits —
+    the TPU digit-serial optimization is mathematically exact."""
+    cfg1 = ModelConfig(name="q", family="dense",
+                       policy=QuantPolicy(mode="qat", w_bits=4, a_bits=8,
+                                          radix_bits=1), **BASE)
+    cfg7 = dataclasses.replace(
+        cfg1, policy=dataclasses.replace(cfg1.policy, radix_bits=7))
+    params = init_params(jax.random.PRNGKey(0), cfg1)
+    packed = pack_params(params, cfg1)
+    toks = _toks(9)
+    batch = {"tokens": toks, "labels": jnp.zeros_like(toks)}
+    l1, _ = forward(packed, batch, cfg1)
+    l7, _ = forward(packed, batch, cfg7)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l7),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,55 @@
+"""MVU post-pipeline modules: bit-exact fixed-point datapath tests."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitops
+from repro.core.pipeline_modules import (QuantSerConfig, ScalerConfig,
+                                         maxpool_relu, quantize_serialize,
+                                         relu, scaler_bias_fixed)
+
+
+def test_scaler_bias_fixed_exact():
+    acc = jnp.asarray([1000, -2000, 123456], jnp.int32)
+    scale = jnp.asarray([256, 256, 128], jnp.int32)
+    bias = jnp.asarray([10, -10, 0], jnp.int32)
+    out = scaler_bias_fixed(acc, scale, bias, ScalerConfig(shift=8))
+    np.testing.assert_array_equal(np.asarray(out),
+                                  [1000 + 10, -2000 - 10, 123456 // 2])
+
+
+@given(st.integers(1, 12), st.integers(0, 20), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_quantize_serialize_range(out_bits, msb_pos, seed):
+    rng = np.random.RandomState(seed)
+    acc = jnp.asarray(rng.randint(-2**24, 2**24, 64), jnp.int32)
+    cfg = QuantSerConfig(out_bits=out_bits, out_signed=True, msb_pos=msb_pos)
+    out = np.asarray(quantize_serialize(acc, cfg))
+    lo, hi = -(1 << (out_bits - 1)), (1 << (out_bits - 1)) - 1
+    assert out.min() >= lo and out.max() <= hi
+
+
+def test_quantser_roundtrips_through_bit_transpose():
+    """Serializer output must be re-packable — only layer 0 needs the host
+    transposer (paper §3.1.2)."""
+    rng = np.random.RandomState(0)
+    acc = jnp.asarray(rng.randint(-1000, 1000, 64), jnp.int32)
+    cfg = QuantSerConfig(out_bits=4, msb_pos=10)
+    codes = quantize_serialize(acc, cfg)
+    bt = bitops.bit_transpose(codes, 4, True)
+    np.testing.assert_array_equal(np.asarray(bt.unpack()), np.asarray(codes))
+
+
+def test_maxpool_relu_combined():
+    x = jnp.asarray(np.arange(16, dtype=np.float32).reshape(1, 4, 4, 1) - 8)
+    out = maxpool_relu(x, window=2)
+    # all-negative windows clamp to 0 (the comparator register starts at 0)
+    assert float(out[0, 0, 0, 0]) == 0.0
+    assert float(out[0, 1, 1, 0]) == 7.0
+    assert out.shape == (1, 2, 2, 1)
+
+
+def test_relu_is_comparator_vs_zero():
+    x = jnp.asarray([-5, 0, 5], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(relu(x)), [0, 0, 5])

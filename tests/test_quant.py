@@ -1,0 +1,105 @@
+"""LSQ quantizer tests: gradients, convergence, PTQ, weight packing."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+from repro.core.quant import QuantSpec
+
+
+def test_lsq_forward_matches_quantize():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(128).astype(np.float32))
+    spec = QuantSpec(4, True)
+    alpha = quant.init_alpha(x, spec)
+    xq = quant.lsq_fake_quant(x, alpha, spec)
+    codes = quant.quantize_int(x, alpha, spec)
+    np.testing.assert_allclose(np.asarray(xq),
+                               np.asarray(quant.dequantize(codes, alpha)),
+                               rtol=1e-5)
+
+
+def test_lsq_ste_passthrough_gradient():
+    spec = QuantSpec(8, True)
+    x = jnp.linspace(-0.5, 0.5, 65)
+    alpha = jnp.asarray(0.01)
+    g = jax.grad(lambda x: jnp.sum(quant.lsq_fake_quant(x, alpha, spec)))(x)
+    # interior points pass gradient through; clipped points block it
+    interior = np.abs(np.asarray(x) / 0.01) < 127
+    np.testing.assert_array_equal(np.asarray(g)[interior], 1.0)
+    np.testing.assert_array_equal(np.asarray(g)[~interior], 0.0)
+
+
+@given(st.integers(2, 8), st.booleans(), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_lsq_codes_in_range(bits, signed, seed):
+    rng = np.random.RandomState(seed)
+    spec = QuantSpec(bits, signed)
+    x = jnp.asarray(np.abs(rng.randn(64)) if not signed else rng.randn(64),
+                    jnp.float32)
+    alpha = quant.init_alpha(x, spec)
+    codes = np.asarray(quant.quantize_int(x, alpha, spec))
+    qn, qp = quant.qrange(bits, signed)
+    assert codes.min() >= qn and codes.max() <= qp
+
+
+def test_lsq_alpha_learns():
+    """Step size converges toward reducing quantization MSE."""
+    rng = np.random.RandomState(1)
+    spec = QuantSpec(3, True)
+    x = jnp.asarray(rng.randn(4096).astype(np.float32))
+    alpha = quant.init_alpha(x, spec) * 5.0  # deliberately bad init
+
+    def loss(a):
+        return jnp.mean((quant.lsq_fake_quant(x, a, spec) - x) ** 2)
+
+    l0 = float(loss(alpha))
+    step = jax.jit(lambda a: a - 20.0 * jax.grad(loss)(a))
+    for _ in range(500):
+        alpha = step(alpha)
+    l1 = float(loss(alpha))
+    # LSQ's gradient scale g=1/sqrt(N*Qp) makes steps small but steady
+    assert l1 < l0 * 0.5, (l0, l1)
+
+
+def test_ptq_calibration():
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.randn(10000).astype(np.float32))
+    spec = QuantSpec(8, True)
+    alpha = quant.calibrate(x, spec)
+    xq = quant.lsq_fake_quant(x, alpha, spec)
+    mse = float(jnp.mean((xq - x) ** 2))
+    assert mse < 1e-3
+
+
+def test_pack_weights_roundtrip_accuracy():
+    rng = np.random.RandomState(3)
+    w = jnp.asarray((rng.randn(128, 32) / 8).astype(np.float32))
+    errs = {}
+    for bits in (2, 4, 8):
+        qw = quant.pack_weights(w, QuantSpec(bits, True, per_channel=True))
+        from repro.core import bitops
+        codes = bitops.from_bitplanes(
+            bitops.unpack_bitplanes(qw.packed, qw.k, axis=1), qw.signed)
+        w_hat = np.asarray(codes) * np.asarray(qw.scale)[None, :]
+        errs[bits] = (np.abs(w_hat - np.asarray(w)).mean()
+                      / np.abs(np.asarray(w)).mean())
+    # error falls monotonically with precision and is small at 8 bits
+    assert errs[2] > errs[4] > errs[8]
+    assert errs[8] < 0.06 and errs[4] < 0.25 and errs[2] < 0.7
+
+
+def test_per_channel_beats_per_tensor():
+    rng = np.random.RandomState(4)
+    w = rng.randn(64, 16).astype(np.float32)
+    w[:, 3] *= 20.0  # one hot channel
+    wj = jnp.asarray(w)
+    spec_pc = QuantSpec(4, True, per_channel=True)
+    spec_pt = QuantSpec(4, True)
+    a_pc = quant.init_alpha(wj, spec_pc, axis=0)
+    a_pt = quant.init_alpha(wj, spec_pt)
+    e_pc = float(jnp.mean((quant.lsq_fake_quant(wj, a_pc, spec_pc) - wj) ** 2))
+    e_pt = float(jnp.mean((quant.lsq_fake_quant(wj, a_pt, spec_pt) - wj) ** 2))
+    assert e_pc < e_pt
