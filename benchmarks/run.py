@@ -1,28 +1,56 @@
 """Benchmark harness — one function per paper table + kernel micro-bench +
-roofline summary. Prints ``name,us_per_call,derived`` CSV rows.
+roofline summary. Prints ``name,us_per_call,derived`` CSV rows and writes a
+machine-readable ``BENCH_kernels.json`` (name → us_per_call + derived) so
+the perf trajectory is tracked PR-over-PR.
 
-Run: PYTHONPATH=src python -m benchmarks.run
+Run: PYTHONPATH=src python -m benchmarks.run [--only kernels,tables]
+     [--json BENCH_kernels.json]
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 import timeit
 
 import numpy as np
 
+_ROWS: dict = {}
 
-def _time_us(fn, n=5, warmup=1):
+
+def _emit(name: str, us: float, derived: str = "") -> None:
+    """One result row: CSV to stdout + recorded for the JSON dump."""
+    print(f"{name},{us:.0f},{derived}")
+    _ROWS[name] = {"us_per_call": round(float(us), 1), "derived": derived}
+
+
+def _time_us(fn, n=5, warmup=1, repeat=3):
+    """Best-of-``repeat`` mean over ``n`` calls — the minimum strips
+    scheduler/contention spikes, which otherwise dominate on shared CI
+    machines and make speedup ratios unstable."""
     for _ in range(warmup):
         fn()
-    t = timeit.timeit(fn, number=n)
-    return t / n * 1e6
+    return min(timeit.repeat(fn, number=n, repeat=repeat)) / n * 1e6
+
+
+def _time_interleaved_us(fns, n=2, rounds=4):
+    """Time several candidates under the SAME load: alternate them
+    round-robin and take each one's best round. Timing A fully then B fully
+    lets a background-load shift land entirely on one side and corrupt the
+    A/B ratio; interleaving makes both sides sample every load phase."""
+    for fn in fns:
+        fn()  # warmup/compile
+    best = [float("inf")] * len(fns)
+    for _ in range(rounds):
+        for i, fn in enumerate(fns):
+            best[i] = min(best[i], timeit.timeit(fn, number=n) / n * 1e6)
+    return best
 
 
 def table2_model_sizes():
     """Paper Table 2: ResNet9 model sizes (fp32 vs int2 packed)."""
     import jax
-    import jax.numpy as jnp
     from repro.core.codegen import export_weights
     from repro.models.resnet import ResNet9Config, resnet9_init
     cfg = ResNet9Config()
@@ -34,9 +62,9 @@ def table2_model_sizes():
     fp32 = sum(params[n]["w"].nbytes for n, *_ in cfg.layers)
     us = (time.time() - t0) * 1e6
     # paper: Plain-CNN fp32 18912487 B, Int2 1181360 B
-    print(f"table2_fp32_bytes,{us:.0f},{fp32} (paper 18912487)")
-    print(f"table2_int2_bytes,{us:.0f},{packed} (paper 1181360)")
-    print(f"table2_compression,{us:.0f},{fp32/packed:.1f}x")
+    _emit("table2_fp32_bytes", us, f"{fp32} (paper 18912487)")
+    _emit("table2_int2_bytes", us, f"{packed} (paper 1181360)")
+    _emit("table2_compression", us, f"{fp32/packed:.1f}x")
 
 
 def table3_resnet9_cycles():
@@ -50,16 +78,17 @@ def table3_resnet9_cycles():
     for k, v in cm.RESNET9_PAPER_CYCLES.items():
         match = named[k] == v
         exact += match
-        print(f"table3_{k},{us:.0f},{named[k]} (paper {v} "
-              f"{'EXACT' if match else 'dev'})")
+        _emit(f"table3_{k}", us,
+              f"{named[k]} (paper {v} {'EXACT' if match else 'dev'})")
     total = sum(cyc)
-    print(f"table3_total,{us:.0f},{total} (paper {cm.RESNET9_PAPER_TOTAL} "
+    _emit("table3_total", us,
+          f"{total} (paper {cm.RESNET9_PAPER_TOTAL} "
           f"{'EXACT' if total == cm.RESNET9_PAPER_TOTAL else ''}) "
           f"[{exact}/8 layers exact]")
     # the other edge variants, for the reconciliation note
     for edge in ("dense", "pad_skip"):
         t = sum(cm.network_cycles(cm.RESNET9_CIFAR10, 2, 2, edge=edge))
-        print(f"table3_total_{edge},{us:.0f},{t}")
+        _emit(f"table3_total_{edge}", us, str(t))
 
 
 def table5_cnv_fps():
@@ -69,11 +98,11 @@ def table5_cnv_fps():
     us = (time.time() - t0) * 1e6
     for (w, a), paper in cm.CNV_PAPER_FPS.items():
         fps = cm.pipelined_fps(cm.CNV_CIFAR10, a, w)
-        print(f"table5_cnv_W{w}A{a},{us:.0f},{fps:.0f} FPS "
-              f"(paper {paper}; ratio {fps/paper:.2f})")
+        _emit(f"table5_cnv_W{w}A{a}", us,
+              f"{fps:.0f} FPS (paper {paper}; ratio {fps/paper:.2f})")
     f11 = cm.pipelined_fps(cm.CNV_CIFAR10, 1, 1)
     f22 = cm.pipelined_fps(cm.CNV_CIFAR10, 2, 2)
-    print(f"table5_scaling_1x1_over_2x2,{us:.0f},{f11/f22:.2f} (paper 4.00)")
+    _emit("table5_scaling_1x1_over_2x2", us, f"{f11/f22:.2f} (paper 4.00)")
 
 
 def table6_resnet50():
@@ -85,22 +114,28 @@ def table6_resnet50():
     fps_p = cm.pipelined_fps(layers, 2, 1, edge="paper_edge")
     us = (time.time() - t0) * 1e6
     hw = cm.HWConfig()
-    print(f"table6_resnet50_fps,{us:.0f},{fps_d:.0f} "
-          f"(paper {cm.RESNET50_PAPER['fps']}; distributed-mode estimate)")
-    print(f"table6_resnet50_fps_per_watt,{us:.0f},{fps_d/hw.power_w:.1f} "
+    _emit("table6_resnet50_fps", us,
+          f"{fps_d:.0f} (paper {cm.RESNET50_PAPER['fps']}; "
+          "distributed-mode estimate)")
+    _emit("table6_resnet50_fps_per_watt", us,
+          f"{fps_d/hw.power_w:.1f} "
           f"(paper {cm.RESNET50_PAPER['fps_per_watt']}; FILM-QNN 8.4)")
-    print(f"table6_resnet50_fps_pipelined,{us:.0f},{fps_p:.0f}")
+    _emit("table6_resnet50_fps_pipelined", us, f"{fps_p:.0f}")
 
 
 def bench_serial_matmul():
-    """Micro-bench: serial matmul XLA path vs float matmul (CPU timings are
-    indicative only; the TPU target uses the Pallas kernel)."""
+    """Micro-bench: XLA serve path, seed digit plan (radix 7, two plane
+    products at W4A8) vs the v2 plan-selected path (radix 8, one).
+
+    CPU timings are indicative only; the TPU target uses the Pallas kernel.
+    """
     import jax
     import jax.numpy as jnp
     from repro.core import bitops
-    from repro.core.bitserial import SerialSpec, serial_matmul_packed
+    from repro.core.bitserial import (SerialSpec, plan_spec,
+                                      serial_matmul_packed)
     rng = np.random.RandomState(0)
-    m, k, n = 64, 1024, 1024
+    m, k, n = 256, 1024, 1024
     x = jnp.asarray(rng.randint(-128, 128, (m, k)), jnp.int32)
     w = rng.randint(-8, 8, (k, n)).astype(np.int32)
     planes = bitops.pad_to(bitops.to_bitplanes(jnp.asarray(w), 4), 32, axis=1)
@@ -109,44 +144,104 @@ def bench_serial_matmul():
     wf = jnp.asarray(rng.randn(k, n), jnp.float32)
 
     f_float = jax.jit(lambda a, b: a @ b)
-    for radix, name in ((1, "bitserial_r2"), (7, "digitserial_r128")):
-        spec = SerialSpec(8, 4, True, True, radix)
+    shape_tag = f"{m}x{k}x{n}"
+    cases = [
+        ("seed", SerialSpec(8, 4, True, True, 7)),           # seed default
+        ("v2", plan_spec(SerialSpec(8, 4, True, True, 7))),  # tuned plan
+        ("bitserial_r2", SerialSpec(8, 4, True, True, 1)),   # faithful
+    ]
+    fns = []
+    for _, spec in cases:
         f = jax.jit(lambda xx, ww, s=spec: serial_matmul_packed(
             xx, ww, spec=s, k=k))
-        us = _time_us(lambda: jax.block_until_ready(f(x, wp)))
-        print(f"bench_{name}_W4A8_{m}x{k}x{n},{us:.0f},"
-              f"{spec.num_plane_products} plane products")
+        fns.append(lambda f=f: jax.block_until_ready(f(x, wp)))
+    times = _time_interleaved_us(fns, n=2, rounds=6)
+    results = {}
+    for (name, spec), us in zip(cases, times):
+        results[name] = us
+        _emit(f"bench_serial_matmul_W4A8_{name}_{shape_tag}", us,
+              f"{spec.num_plane_products} plane products "
+              f"(radix {spec.radix_bits})")
+    _emit("bench_serial_matmul_W4A8_v2_speedup", 0,
+          f"{results['seed']/results['v2']:.2f}x vs seed")
     us_f = _time_us(lambda: jax.block_until_ready(f_float(xf, wf)))
-    print(f"bench_float_matmul_{m}x{k}x{n},{us_f:.0f},fp32 reference")
+    _emit(f"bench_float_matmul_{shape_tag}", us_f, "fp32 reference")
 
 
 def bench_pallas_kernel():
-    """Pallas kernel in interpret mode (correctness-path timing)."""
+    """Pallas kernels in interpret mode, W4A8, same logical shape: seed v1
+    (int-code acts, per-step plane unpack) vs v2 (packed acts, hoisted
+    VMEM-scratch digit planes, tuned digit plan)."""
     import jax
     import jax.numpy as jnp
     from repro.core import bitops
-    from repro.core.bitserial import SerialSpec
-    from repro.kernels.bitserial_matmul import bitserial_matmul_pallas
+    from repro.core.bitserial import SerialSpec, plan_spec
+    from repro.kernels.bitserial_matmul import (bitserial_matmul_pallas,
+                                                bitserial_matmul_v2_pallas)
     rng = np.random.RandomState(0)
-    m, k, n = 16, 256, 64
-    x = jnp.asarray(rng.randint(-8, 8, (m, k)), jnp.int32)
+    m, k, n = 128, 512, 128
+    bm, bn, bk = 16, 32, 128       # multi-block grid on every axis
+    x = rng.randint(-128, 128, (m, k)).astype(np.int32)
     w = rng.randint(-8, 8, (k, n)).astype(np.int32)
-    planes = bitops.pad_to(bitops.to_bitplanes(jnp.asarray(w), 4), 32, axis=1)
-    wp = bitops.pack_bitplanes(planes, axis=1)
+    wp = bitops.pack_bitplanes(
+        bitops.pad_to(bitops.to_bitplanes(jnp.asarray(w), 4), 32, axis=1),
+        axis=1)
+    xp = bitops.pack_bitplanes(
+        bitops.pad_to(bitops.to_bitplanes(jnp.asarray(x), 8), 32, axis=-1),
+        axis=-1)
     scale = np.ones(n, np.float32)
-    spec = SerialSpec(4, 4, True, True, 7)
-    fn = jax.jit(lambda xx, ww: bitserial_matmul_pallas(
-        xx, ww, scale, None, spec=spec, k=k, block_m=16, block_n=32,
-        block_k=64, interpret=True))
-    us = _time_us(lambda: jax.block_until_ready(fn(x, wp)), n=3)
-    print(f"bench_pallas_interpret_W4A4_{m}x{k}x{n},{us:.0f},"
-          "interpret mode (TPU kernel validated vs ref)")
+    shape_tag = f"{m}x{k}x{n}"
+
+    from repro.core.quant import QuantSpec
+    seed_spec = SerialSpec(8, 4, True, True, 7)
+    v2_spec = plan_spec(seed_spec)
+    fn_v1 = jax.jit(lambda xx, ww: bitserial_matmul_pallas(
+        jnp.asarray(xx), ww, scale, None, spec=seed_spec, k=k, block_m=bm,
+        block_n=bn, block_k=bk, interpret=True))
+    fn_v2 = jax.jit(lambda xx, ww: bitserial_matmul_v2_pallas(
+        xx, ww, scale, None, spec=v2_spec, k=k, block_m=bm, block_n=bn,
+        block_k=bk, interpret=True))
+    # fused requant->bit-transpose-pack epilogue (layer-chaining output)
+    fn_v2p = jax.jit(lambda xx, ww: bitserial_matmul_v2_pallas(
+        xx, ww, scale, None, spec=v2_spec, k=k, requant=QuantSpec(8, True),
+        requant_scale=jnp.asarray(0.5), emit_packed=True, block_m=bm,
+        block_n=bn, block_k=bk, interpret=True))
+    us_v1, us_v2, us_v2p = _time_interleaved_us([
+        lambda: jax.block_until_ready(fn_v1(x, wp)),
+        lambda: jax.block_until_ready(fn_v2(xp, wp)),
+        lambda: jax.block_until_ready(fn_v2p(xp, wp)),
+    ], n=2, rounds=4)
+    _emit(f"bench_pallas_kernel_W4A8_seed_{shape_tag}", us_v1,
+          f"v1, blocks ({bm},{bn},{bk}), interpret")
+    _emit(f"bench_pallas_kernel_W4A8_v2_{shape_tag}", us_v2,
+          "v2, packed acts + hoisted planes, interpret")
+    _emit("bench_pallas_kernel_W4A8_v2_speedup", 0,
+          f"{us_v1/us_v2:.2f}x vs seed")
+    _emit(f"bench_pallas_kernel_W4A8_v2_fusedpack_{shape_tag}", us_v2p,
+          "v2 + fused requant-pack epilogue, interpret")
+
+
+def bench_tuner():
+    """Autotuner overhead: cold enumeration vs in-process cache hit."""
+    from repro.core.bitserial import SerialSpec
+    from repro.kernels import tuning
+    spec = SerialSpec(8, 4, True, True, 8)
+    tuning.clear_cache()
+    t0 = time.time()
+    tc = tuning.choose_tile(64, 4096, 4096, spec)
+    cold = (time.time() - t0) * 1e6
+    us_hit = _time_us(lambda: tuning.choose_tile(64, 4096, 4096, spec),
+                      n=100, warmup=1)
+    _emit("bench_tuner_cold_us", cold,
+          f"blocks ({tc.block_m},{tc.block_n},{tc.block_k}) "
+          f"cw={tc.cache_weights} ca={tc.cache_acts} "
+          f"vmem={tc.vmem_bytes/2**20:.2f}MiB")
+    _emit("bench_tuner_cache_hit_us", us_hit,
+          f"{tuning.cache_info()['entries']} entries")
 
 
 def bench_quantized_lm_serve():
     """Tokens/s of the smoke LM through the full quantized serve path."""
-    import jax
-    import jax.numpy as jnp
     from repro.configs import get_arch
     from repro.launch.serve import GenRequest, Server
     cfg = get_arch("stablelm-1.6b").smoke
@@ -159,7 +254,7 @@ def bench_quantized_lm_serve():
     out = server.generate(reqs)
     dt = time.time() - t0
     ntok = sum(len(r.out_tokens) for r in out)
-    print(f"bench_lm_serve_W4A8,{dt/max(ntok,1)*1e6:.0f},"
+    _emit("bench_lm_serve_W4A8", dt / max(ntok, 1) * 1e6,
           f"{ntok/dt:.1f} tok/s (smoke cfg, CPU)")
 
 
@@ -171,30 +266,54 @@ def roofline_summary():
         from roofline import table  # run as a script
     rows = table()
     if not rows:
-        print("roofline_cells,0,no dryrun artifacts found")
+        _emit("roofline_cells", 0, "no dryrun artifacts found")
         return
     n_dom = {}
     for r in rows:
         n_dom[r["dominant"]] = n_dom.get(r["dominant"], 0) + 1
     worst = min(rows, key=lambda r: r["roofline_frac"])
     best = max(rows, key=lambda r: r["roofline_frac"])
-    print(f"roofline_cells,0,{len(rows)} cells; dominant terms {n_dom}")
-    print(f"roofline_worst,0,{worst['arch']}/{worst['shape']}/{worst['mesh']}"
+    _emit("roofline_cells", 0, f"{len(rows)} cells; dominant terms {n_dom}")
+    _emit("roofline_worst", 0,
+          f"{worst['arch']}/{worst['shape']}/{worst['mesh']}"
           f" frac={worst['roofline_frac']:.3f}")
-    print(f"roofline_best,0,{best['arch']}/{best['shape']}/{best['mesh']}"
+    _emit("roofline_best", 0,
+          f"{best['arch']}/{best['shape']}/{best['mesh']}"
           f" frac={best['roofline_frac']:.3f}")
 
 
-def main() -> None:
+GROUPS = {
+    "tables": [table2_model_sizes, table3_resnet9_cycles, table5_cnv_fps,
+               table6_resnet50],
+    "kernels": [bench_serial_matmul, bench_pallas_kernel, bench_tuner],
+    "serve": [bench_quantized_lm_serve],
+    "roofline": [roofline_summary],
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench groups "
+                         f"({'/'.join(GROUPS)}); default: all")
+    ap.add_argument("--json", default="BENCH_kernels.json",
+                    help="path for the machine-readable dump "
+                         "('' disables)")
+    args = ap.parse_args(argv)
+    groups = list(GROUPS) if not args.only else [
+        g.strip() for g in args.only.split(",") if g.strip()]
+    unknown = [g for g in groups if g not in GROUPS]
+    if unknown:
+        ap.error(f"unknown bench group(s) {unknown}; "
+                 f"choose from {list(GROUPS)}")
     print("name,us_per_call,derived")
-    table2_model_sizes()
-    table3_resnet9_cycles()
-    table5_cnv_fps()
-    table6_resnet50()
-    bench_serial_matmul()
-    bench_pallas_kernel()
-    bench_quantized_lm_serve()
-    roofline_summary()
+    for g in groups:
+        for fn in GROUPS[g]:
+            fn()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(_ROWS, f, indent=1, sort_keys=True)
+        print(f"# wrote {len(_ROWS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -32,7 +32,8 @@ import numpy as np
 
 from repro.core import bitops
 
-__all__ = ["SerialSpec", "serial_matmul", "serial_matmul_packed", "serial_conv2d"]
+__all__ = ["SerialSpec", "serial_matmul", "serial_matmul_packed",
+           "serial_matmul_packed_acts", "serial_conv2d", "plan_spec"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +62,30 @@ class SerialSpec:
         na = bitops.num_digits(self.a_bits, self.radix_bits, self.a_signed)
         nw = bitops.num_digits(self.w_bits, self.radix_bits, self.w_signed)
         return na * nw
+
+
+def plan_spec(spec: SerialSpec) -> SerialSpec:
+    """Digit-plan selection for the TPU-native path (DESIGN.md §2.4).
+
+    ``radix_bits == 1`` is the paper-faithful mode and is never rewritten.
+    For digit-serial specs the integer result is radix-invariant, so we are
+    free to pick the radix that minimizes MXU issues (``nd_a * nd_w`` plane
+    products): e.g. W4A8 signed/signed at the default radix 7 takes two
+    matmuls, but radix 8 (signed single-digit) takes one.
+    """
+    if spec.radix_bits <= 1:
+        return spec
+    best, best_cost = spec, spec.num_plane_products
+    for r in (7, 8):
+        try:
+            na = bitops.num_digits(spec.a_bits, r, spec.a_signed)
+            nw = bitops.num_digits(spec.w_bits, r, spec.w_signed)
+        except ValueError:
+            continue
+        if na * nw < best_cost:
+            best = dataclasses.replace(spec, radix_bits=r)
+            best_cost = na * nw
+    return best
 
 
 def _plane_dot(xp: jax.Array, wp: jax.Array) -> jax.Array:
@@ -203,6 +228,31 @@ def serial_matmul_packed(
         return acc
     wd = digits_from_planes(planes, spec.w_bits, s, spec.w_signed)
     xd = bitops.to_digits(x_int, spec.a_bits, s, spec.a_signed)
+    return _digit_combine(xd, wd, s)
+
+
+def serial_matmul_packed_acts(
+    x_packed: jax.Array,
+    w_packed: jax.Array,
+    *,
+    spec: SerialSpec,
+    k: int,
+) -> jax.Array:
+    """Serial matmul with **both operands bit-packed** — the v2 deployment
+    path (DESIGN.md §2.3). ``x_packed``: (a_bits, M, ceil(K/32)) uint32, the
+    exact format :func:`repro.kernels.quantize_pack.quantize_pack_pallas`
+    emits; ``w_packed``: (w_bits, ceil(K/32), N) uint32.
+
+    Activation HBM bytes scale with ``a_bits`` just like weight bytes scale
+    with ``w_bits`` — this is the XLA oracle of the v2 Pallas kernel, and
+    digit planes are assembled int8-only on BOTH sides via
+    :func:`digits_from_planes` (no int32 value materialization).
+    """
+    a_planes = bitops.unpack_bitplanes(x_packed, k, axis=-1)  # (ba, M, K)
+    w_planes = bitops.unpack_bitplanes(w_packed, k, axis=1)   # (bw, K, N)
+    s = spec.radix_bits
+    xd = digits_from_planes(a_planes, spec.a_bits, s, spec.a_signed)
+    wd = digits_from_planes(w_planes, spec.w_bits, s, spec.w_signed)
     return _digit_combine(xd, wd, s)
 
 

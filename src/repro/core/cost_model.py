@@ -28,7 +28,8 @@ from repro.core.mvu import LANES, MVU_COUNT
 
 __all__ = ["HWConfig", "ConvLayer", "LinearLayer", "layer_cycles",
            "pipelined_fps", "distributed_fps", "network_cycles",
-           "RESNET9_CIFAR10", "CNV_CIFAR10", "resnet50_layers"]
+           "RESNET9_CIFAR10", "CNV_CIFAR10", "resnet50_layers",
+           "TPUConfig", "kernel_vmem_bytes", "kernel_cost"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,6 +141,86 @@ def distributed_fps(layers: Sequence, a_bits: int, w_bits: int,
     if total == 0:
         return float("inf")
     return hw.freq_hz / (total / hw.mvus)
+
+
+# --------------------------------------------------------------------------
+# TPU kernel cost model (v2 Pallas serial matmul — DESIGN.md §2.5)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TPUConfig:
+    """Roofline constants for the Pallas kernel tile autotuner.
+
+    Absolute numbers only set the ratio between the HBM and compute terms;
+    the tuner ranks *relative* tile costs, so default v4-class figures are
+    fine for CPU/interpret runs too.
+    """
+
+    vmem_bytes: int = 16 * 2 ** 20        # per-core VMEM
+    vmem_budget_frac: float = 0.75        # leave headroom for the compiler
+    hbm_bw: float = 8.0e11                # bytes/s
+    int8_macs: float = 2.6e14             # MXU int8 MAC/s
+    vpu_ops: float = 4.0e12               # VPU elementwise ops/s
+
+
+def _grid_shape(m, k, n, bm, bn, bk):
+    return (-(-n // bn), -(-m // bm), -(-k // bk))  # (n_j, n_i, n_k)
+
+
+def kernel_vmem_bytes(m: int, k: int, n: int, *, a_bits: int, w_bits: int,
+                      nd_a: int, nd_w: int, bm: int, bn: int, bk: int,
+                      cache_weights: bool, cache_acts: bool,
+                      out_bits: Optional[int] = None) -> int:
+    """VMEM working set of one v2 kernel invocation (bytes).
+
+    BlockSpec-pipelined buffers are double-buffered (x2); scratch buffers
+    (accumulator + cached digit planes) are single instances that persist
+    across the whole grid.
+    """
+    n_j, n_i, n_k = _grid_shape(m, k, n, bm, bn, bk)
+    x_tile = a_bits * bm * (bk // 32) * 4        # packed act tile, uint32
+    w_tile = w_bits * (bk // 32) * bn * 4        # packed weight tile
+    out_tile = (out_bits * bm * (bn // 32) * 4 if out_bits
+                else bm * bn * 4)
+    pipelined = 2 * (x_tile + w_tile + out_tile + 2 * bn * 4 + 4)
+    acc = bm * bn * 4
+    w_scr = n_k * nd_w * bk * bn if cache_weights else 0
+    a_scr = n_i * n_k * nd_a * bm * bk if cache_acts else 0
+    return pipelined + acc + w_scr + a_scr
+
+
+def kernel_cost(m: int, k: int, n: int, *, a_bits: int, w_bits: int,
+                nd_a: int, nd_w: int, bm: int, bn: int, bk: int,
+                cache_weights: bool, cache_acts: bool,
+                out_bits: Optional[int] = None,
+                tpu: TPUConfig = TPUConfig()) -> float:
+    """Modeled seconds per v2 kernel call — roofline over HBM + MXU, plus a
+    VPU term for the digit-plane assembly work.
+
+    The assembly term is where the v2 hoisting shows up: cached weight
+    planes are unpacked once per (n-block, k-step) instead of once per grid
+    step; cached activation planes once per (m-block, k-step). The HBM term
+    uses *padded* shapes, so the model also penalizes block sizes that
+    over-pad ragged operands.
+    """
+    n_j, n_i, n_k = _grid_shape(m, k, n, bm, bn, bk)
+    mp, np_, kp = n_i * bm, n_j * bn, n_k * bk
+
+    # HBM traffic: BlockSpec re-fetches a tile each grid step it is mapped
+    act_bytes = n_j * (a_bits * mp * (kp // 32) * 4)
+    w_bytes = n_i * (w_bits * (kp // 32) * np_ * 4)
+    out_bytes = (out_bits * mp * (np_ // 32) * 4 if out_bits else mp * np_ * 4)
+    hbm = act_bytes + w_bytes + out_bytes
+
+    macs = float(nd_a * nd_w) * mp * kp * np_
+
+    # digit-plane assembly (unpack shifts + int8 scale-adds), VPU-bound
+    w_asm = (w_bits + nd_w) * kp * np_ * (1 if cache_weights else n_i)
+    a_asm = (a_bits + nd_a) * mp * kp * (1 if cache_acts else n_j)
+    epilogue = mp * np_ * (3 + (out_bits or 0))
+    vpu = w_asm + a_asm + epilogue
+
+    return max(hbm / tpu.hbm_bw, macs / tpu.int8_macs) + vpu / tpu.vpu_ops
 
 
 # --------------------------------------------------------------------------

@@ -1,3 +1,10 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Layout:
+#   bitserial_matmul.py — v1 + v2 Pallas TPU kernels (DESIGN.md §2)
+#   quantize_pack.py    — fused quantize→bit-transpose-pack (QuantSer)
+#   tuning.py           — cost-model-driven block-size autotuner
+#   ops.py              — jit'd backend dispatch (xla / ref / pallas / v2)
+#   ref.py              — pure-jnp oracle

@@ -37,10 +37,15 @@ import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.core import bitops
-from repro.core.bitserial import SerialSpec
+from repro.core.bitserial import SerialSpec, digits_from_planes
 from repro.core.quant import QuantSpec, qrange
 
-__all__ = ["bitserial_matmul_pallas"]
+__all__ = ["bitserial_matmul_pallas", "bitserial_matmul_v2_pallas"]
+
+# jax renamed TPUCompilerParams -> CompilerParams across versions; take
+# whichever this interpreter ships.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
 
 
 def _unpack_planes(words, block_k: int):
@@ -224,8 +229,287 @@ def bitserial_matmul_pallas(
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), out_dt),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w_packed, scale, bias)
+    return out[:m, :n]
+
+
+# ===========================================================================
+# v2: packed activations, hoisted plane work, fused requant-pack epilogue
+# ===========================================================================
+
+def _unpack_plane_words(words, length: int, axis_word: int):
+    """Unpack uint32 words into {0,1} int8 bit planes along ``axis_word``.
+
+    ``words``: (bits, ..., G, ...) with the 32-lane word axis at
+    ``axis_word`` (relative to one plane, i.e. excluding the leading bits
+    axis). Returns (bits, ...) int8 with that axis expanded to ``length``.
+    """
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    x = jnp.moveaxis(words, axis_word + 1, -1)
+    bits = jnp.bitwise_and(
+        jnp.right_shift(x[..., None], shifts), jnp.uint32(1)).astype(jnp.int8)
+    bits = bits.reshape(bits.shape[:-2] + (x.shape[-1] * 32,))[..., :length]
+    return jnp.moveaxis(bits, -1, axis_word + 1)
+
+
+def _assemble_w_digits(w_words, block_k: int, spec: SerialSpec):
+    """(bw, G, bn) uint32 -> (nd_w, block_k, bn) int8 digit planes."""
+    planes = _unpack_plane_words(w_words, block_k, axis_word=0)
+    return digits_from_planes(planes, spec.w_bits, spec.radix_bits,
+                              spec.w_signed)
+
+
+def _assemble_a_digits(a_words, block_k: int, spec: SerialSpec):
+    """(ba, bm, G) uint32 -> (nd_a, bm, block_k) int8 digit planes."""
+    planes = _unpack_plane_words(a_words, block_k, axis_word=1)
+    return digits_from_planes(planes, spec.a_bits, spec.radix_bits,
+                              spec.a_signed)
+
+
+def _digit_matmul_acc(xd, wd, radix_bits: int):
+    """Magnitude-major Horner over int8 digit plane pairs -> int32 tile.
+
+    Digits already carry the two's-complement sign (assembled by
+    :func:`digits_from_planes`), so no negate flags are needed — partial
+    products of equal magnitude ``m = j_a + j_w`` accumulate first, then the
+    accumulator shifts by ``radix_bits`` once per magnitude step (the VVP
+    shifter-accumulator, Algorithm 1 re-based to radix ``2^s``).
+    """
+    na, nw = xd.shape[0], wd.shape[0]
+    max_mag = (na - 1) + (nw - 1)
+    partials = [None] * (max_mag + 1)
+    for j in range(na):
+        for k in range(nw):
+            p = jax.lax.dot_general(
+                xd[j], wd[k], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            m = j + k
+            partials[m] = p if partials[m] is None else partials[m] + p
+    acc = partials[max_mag]
+    for m in range(max_mag - 1, -1, -1):
+        acc = (acc << radix_bits) + partials[m]
+    return acc
+
+
+def _pack_codes(codes, bits: int):
+    """(bm, bn) int32 codes -> (bits, bm, bn/32) uint32 packed planes.
+
+    The in-kernel serializer: identical word layout to
+    :func:`repro.core.bitops.pack_bitplanes` (lane t -> bit t of the word).
+    """
+    u = jnp.bitwise_and(codes, (1 << bits) - 1).astype(jnp.uint32)
+    r, n = u.shape
+    w = u.reshape(r, n // 32, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    planes = []
+    for b in range(bits):
+        sel = jnp.bitwise_and(jnp.right_shift(w, jnp.uint32(b)), jnp.uint32(1))
+        planes.append(jnp.sum(sel * weights, axis=-1, dtype=jnp.uint32))
+    return jnp.stack(planes)
+
+
+def _kernel_v2(x_ref, w_ref, scale_ref, bias_ref, rs_ref, out_ref, acc_ref,
+               *scratch, spec: SerialSpec, block_k: int, relu: bool,
+               out_dtype, requant: Optional[QuantSpec], emit_packed: bool,
+               n_k: int, cache_weights: bool, cache_acts: bool):
+    j = pl.program_id(0)   # n-block (outermost)
+    i = pl.program_id(1)   # m-block
+    kk = pl.program_id(2)  # k-step (innermost, sequential reduction)
+
+    scr = list(scratch)
+    w_scr = scr.pop(0) if cache_weights else None
+    a_scr = scr.pop(0) if cache_acts else None
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # --- weight digit planes: assembled once per (j, kk), reused for every
+    # m-block (hoisted out of the i loop via VMEM scratch) ----------------
+    if cache_weights:
+        @pl.when(i == 0)
+        def _fill_w():
+            w_scr[pl.ds(kk, 1)] = _assemble_w_digits(
+                w_ref[...], block_k, spec)[None]
+        wd = w_scr[pl.ds(kk, 1)][0]
+    else:
+        wd = _assemble_w_digits(w_ref[...], block_k, spec)
+
+    # --- activation digit planes: assembled once per (i, kk), reused for
+    # every n-block ------------------------------------------------------
+    if cache_acts:
+        slot = i * n_k + kk
+        @pl.when(j == 0)
+        def _fill_a():
+            a_scr[pl.ds(slot, 1)] = _assemble_a_digits(
+                x_ref[...], block_k, spec)[None]
+        xd = a_scr[pl.ds(slot, 1)][0]
+    else:
+        xd = _assemble_a_digits(x_ref[...], block_k, spec)
+
+    acc_ref[...] += _digit_matmul_acc(xd, wd, spec.radix_bits)
+
+    @pl.when(kk == n_k - 1)
+    def _epilogue():
+        acc = acc_ref[...].astype(jnp.float32)
+        out = acc * scale_ref[...].astype(jnp.float32)[None, :]
+        out = out + bias_ref[...].astype(jnp.float32)[None, :]
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        if requant is None:
+            out_ref[...] = out.astype(out_dtype)
+        else:
+            qn, qp = qrange(requant.bits, requant.signed)
+            codes = jnp.clip(jnp.round(out / rs_ref[0]), qn, qp).astype(
+                jnp.int32)
+            if emit_packed:
+                out_ref[...] = _pack_codes(codes, requant.bits)
+            else:
+                out_ref[...] = codes.astype(
+                    jnp.int8 if requant.bits <= 8 else jnp.int32)
+
+
+def bitserial_matmul_v2_pallas(
+    x_packed: jax.Array,
+    w_packed: jax.Array,
+    scale: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    spec: SerialSpec,
+    k: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    relu: bool = False,
+    out_dtype=jnp.float32,
+    requant: Optional[QuantSpec] = None,
+    requant_scale: Optional[jax.Array] = None,
+    emit_packed: bool = False,
+    cache_weights: bool = True,
+    cache_acts: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """v2 fused MVU forward over **bit-packed operands on both sides**.
+
+    ``x_packed``: (a_bits, M, ceil(K/32)) uint32 — the exact format
+    :func:`repro.kernels.quantize_pack.quantize_pack_pallas` emits, so
+    activation HBM bytes scale with ``a_bits`` (DESIGN.md §2.3).
+    ``w_packed``: (w_bits, ceil(K/32), N) uint32; ``scale``/``bias``: (N,).
+
+    Improvements over the v1 kernel (DESIGN.md §2.2):
+
+    * grid is reordered to ``(N/bn, M/bm, K/bk)`` and assembled int8 digit
+      planes are cached in VMEM scratch — weight planes are unpacked once
+      per (n-block, k-step) instead of once per grid step, activation planes
+      once per (m-block, k-step),
+    * digits are assembled int8-only via ``digits_from_planes`` (no int32
+      value materialization in VMEM),
+    * with ``requant`` + ``emit_packed`` the epilogue fuses the
+      quantizer/serializer AND the bit-transpose packer: the kernel emits
+      ``(requant.bits, M, ceil(N/32))`` uint32 planes that the next layer's
+      v2 matmul consumes directly — layers chain with no separate
+      ``quantize_pack`` pass.
+
+    ``requant`` semantics: ``codes = clip(round(out / requant_scale))`` —
+    identical to :func:`repro.kernels.ref.bitserial_matmul_ref` and, for the
+    packed output, bit-identical to ``quantize_pack_ref(out, requant_scale,
+    requant)``.
+    """
+    ba, m, kwords = x_packed.shape
+    assert ba == spec.a_bits, (ba, spec.a_bits)
+    bw, kwords_w, n = w_packed.shape
+    assert bw == spec.w_bits, (bw, spec.w_bits)
+    assert kwords == kwords_w == -(-k // 32), (kwords, kwords_w, k)
+    assert block_k % 32 == 0
+    if requant is not None and requant_scale is None:
+        raise ValueError("requant requires requant_scale")
+    if emit_packed:
+        if requant is None:
+            raise ValueError("emit_packed requires requant")
+        if block_n % 32:
+            raise ValueError("emit_packed requires block_n % 32 == 0")
+
+    mp = -(-m // block_m) * block_m
+    np_ = -(-n // block_n) * block_n
+    kp = -(-k // block_k) * block_k
+    x_packed = jnp.pad(x_packed,
+                       ((0, 0), (0, mp - m), (0, kp // 32 - kwords)))
+    w_packed = jnp.pad(w_packed,
+                       ((0, 0), (0, kp // 32 - kwords), (0, np_ - n)))
+    scale = jnp.pad(jnp.broadcast_to(jnp.asarray(scale, jnp.float32), (n,)),
+                    (0, np_ - n))
+    bias = jnp.zeros((n,), jnp.float32) if bias is None else jnp.asarray(
+        bias, jnp.float32)
+    bias = jnp.pad(bias, (0, np_ - n))
+    rs = jnp.broadcast_to(
+        jnp.asarray(1.0 if requant_scale is None else requant_scale,
+                    jnp.float32), (1,))
+
+    n_i, n_j, n_k = mp // block_m, np_ // block_n, kp // block_k
+    grid = (n_j, n_i, n_k)
+
+    nd_w = bitops.num_digits(spec.w_bits, spec.radix_bits, spec.w_signed)
+    nd_a = bitops.num_digits(spec.a_bits, spec.radix_bits, spec.a_signed)
+    # Safety net for callers that pass explicit blocks and bypass the
+    # tuner's VMEM filter: the digit-plane caches grow with the *whole*
+    # padded problem (weights: nd_w*Kp*bn; acts: nd_a*Mp*Kp) — drop them
+    # when they cannot fit rather than fail Mosaic compilation. The tuner
+    # (kernels/tuning.py) makes the same call analytically up front.
+    from repro.core.cost_model import TPUConfig
+    _tpu = TPUConfig()
+    budget = int(_tpu.vmem_bytes * _tpu.vmem_budget_frac)
+    if cache_acts and n_i * n_k * nd_a * block_m * block_k > budget // 2:
+        cache_acts = False
+    if cache_weights and n_k * nd_w * block_k * block_n > budget // 2:
+        cache_weights = False
+    scratch = [pltpu.VMEM((block_m, block_n), jnp.int32)]
+    if cache_weights:
+        scratch.append(pltpu.VMEM((n_k, nd_w, block_k, block_n), jnp.int8))
+    if cache_acts:
+        scratch.append(pltpu.VMEM((n_i * n_k, nd_a, block_m, block_k),
+                                  jnp.int8))
+
+    if emit_packed:
+        out_shape = jax.ShapeDtypeStruct(
+            (requant.bits, mp, np_ // 32), jnp.uint32)
+        out_spec = pl.BlockSpec((requant.bits, block_m, block_n // 32),
+                                lambda j, i, kk: (0, i, j))
+    else:
+        out_dt = (jnp.int8 if requant is not None and requant.bits <= 8
+                  else (jnp.int32 if requant is not None else out_dtype))
+        out_shape = jax.ShapeDtypeStruct((mp, np_), out_dt)
+        out_spec = pl.BlockSpec((block_m, block_n),
+                                lambda j, i, kk: (i, j))
+
+    kernel = functools.partial(
+        _kernel_v2, spec=spec, block_k=block_k, relu=relu,
+        out_dtype=out_dtype, requant=requant, emit_packed=emit_packed,
+        n_k=n_k, cache_weights=cache_weights, cache_acts=cache_acts)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ba, block_m, block_k // 32),
+                         lambda j, i, kk: (0, i, kk)),
+            pl.BlockSpec((bw, block_k // 32, block_n),
+                         lambda j, i, kk: (0, kk, j)),
+            pl.BlockSpec((block_n,), lambda j, i, kk: (j,)),
+            pl.BlockSpec((block_n,), lambda j, i, kk: (j,)),
+            pl.BlockSpec((1,), lambda j, i, kk: (0,)),
+        ],
+        out_specs=out_spec,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        # scratch reuse spans grid steps along every dimension, so all three
+        # must stay sequential on one core ("arbitrary", not "parallel")
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(x_packed, w_packed, scale, bias, rs)
+    if emit_packed:
+        return out[:, :m, : -(-n // 32)]
     return out[:m, :n]

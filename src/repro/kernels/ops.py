@@ -2,14 +2,22 @@
 
 ``backend`` selection:
 
-* ``"pallas"``    — the TPU kernel (``interpret=True`` on CPU for tests),
-* ``"xla"``       — the pure-JAX plane-einsum path (used by the multi-pod
-                    dry-run so XLA's cost analysis sees the real dataflow),
+* ``"pallas"``    — the v1 TPU kernel (``interpret=True`` on CPU for tests),
+* ``"pallas_v2"`` — the v2 TPU kernel: bit-packed activations on the HBM
+                    side, hoisted digit-plane assembly in VMEM scratch, and
+                    (optionally) the fused requant→bit-transpose-pack
+                    epilogue. Block sizes come from the cost-model autotuner
+                    (:mod:`repro.kernels.tuning`) unless given explicitly.
+* ``"xla"``       — the pure-JAX plane path (used by the multi-pod dry-run
+                    so XLA's cost analysis sees the real dataflow),
 * ``"ref"``       — alias of the oracle in :mod:`repro.kernels.ref`.
 
 The higher-level :func:`quantized_linear` is what the model zoo calls in
 ``serve_step``: runtime activation quantization → serial matmul from packed
 weights → fused dequant scaler/bias (and optional ReLU / requant).
+:func:`pack_activations` + :func:`serial_matmul_packed_op` are the v2
+layer-chaining pair: a layer whose epilogue emitted packed planes feeds the
+next layer's matmul with no intermediate unpacked tensor.
 """
 
 from __future__ import annotations
@@ -20,12 +28,112 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.bitserial import SerialSpec, serial_matmul_packed
+from repro.core import bitops
+from repro.core.bitserial import (SerialSpec, plan_spec, serial_matmul_packed,
+                                  serial_matmul_packed_acts)
 from repro.core.quant import QuantSpec, QuantizedWeight, quantize_int, qrange
-from repro.kernels.bitserial_matmul import bitserial_matmul_pallas
+from repro.kernels import tuning
+from repro.kernels.bitserial_matmul import (bitserial_matmul_pallas,
+                                            bitserial_matmul_v2_pallas)
 from repro.kernels.ref import bitserial_matmul_ref
 
-__all__ = ["serial_matmul_op", "quantized_linear"]
+__all__ = ["serial_matmul_op", "serial_matmul_packed_op", "pack_activations",
+           "quantized_linear"]
+
+
+def pack_activations(codes: jax.Array, a_bits: int) -> jax.Array:
+    """Bit-transpose-pack integer activation codes: (..., K) ints ->
+    (a_bits, ..., ceil(K/32)) uint32 — the activation-RAM format the v2
+    matmul consumes (identical layout to ``quantize_pack_pallas``)."""
+    planes = bitops.pad_to(bitops.to_bitplanes(codes, a_bits), 32, axis=-1)
+    return bitops.pack_bitplanes(planes, axis=-1)
+
+
+def _epilogue_xla(acc, scale, bias, *, relu, out_dtype, requant,
+                  requant_scale, emit_packed):
+    out = acc.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
+    if bias is not None:
+        out = out + jnp.asarray(bias, jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    if requant is None:
+        return out.astype(out_dtype)
+    qn, qp = qrange(requant.bits, requant.signed)
+    rs = jnp.asarray(1.0 if requant_scale is None else requant_scale,
+                     jnp.float32)
+    codes = jnp.clip(jnp.round(out / rs), qn, qp).astype(jnp.int32)
+    if emit_packed:
+        return pack_activations(codes, requant.bits)
+    return codes.astype(jnp.int8 if requant.bits <= 8 else jnp.int32)
+
+
+def serial_matmul_packed_op(
+    x_packed: jax.Array,
+    w_packed: jax.Array,
+    scale: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    spec: SerialSpec,
+    k: int,
+    relu: bool = False,
+    out_dtype=jnp.float32,
+    requant: Optional[QuantSpec] = None,
+    requant_scale: Optional[jax.Array] = None,
+    emit_packed: bool = False,
+    backend: str = "pallas_v2",
+    interpret: bool = False,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+) -> jax.Array:
+    """v2 fused serial matmul over **bit-packed activations**.
+
+    ``x_packed``: (a_bits, ..., ceil(K/32)) uint32 (lane axis packed, any
+    leading batch dims); ``w_packed``: (w_bits, ceil(K/32), N). With
+    ``requant`` + ``emit_packed`` the output is (requant.bits, ...,
+    ceil(N/32)) uint32 — directly consumable by the next layer.
+
+    Block sizes default to the cost-model autotuner's choice for this
+    (shape, spec); pass explicit blocks to override.
+    """
+    if emit_packed and requant is None:
+        raise ValueError("emit_packed requires requant")  # both backends
+    lead = x_packed.shape[1:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = x_packed.reshape((x_packed.shape[0], m, x_packed.shape[-1]))
+    n = w_packed.shape[-1]
+
+    if backend == "pallas_v2":
+        tile_kwargs = {}
+        if block_m is None or block_n is None or block_k is None:
+            tc = tuning.choose_tile(
+                m, k, n, spec,
+                out_bits=requant.bits if (requant and emit_packed) else None)
+            tile_kwargs = tc.kernel_kwargs()
+        if block_m is not None:
+            tile_kwargs["block_m"] = block_m
+        if block_n is not None:
+            tile_kwargs["block_n"] = block_n
+        if block_k is not None:
+            tile_kwargs["block_k"] = block_k
+        out = bitserial_matmul_v2_pallas(
+            x2, w_packed, scale, bias, spec=spec, k=k, relu=relu,
+            out_dtype=out_dtype, requant=requant,
+            requant_scale=requant_scale, emit_packed=emit_packed,
+            interpret=interpret, **tile_kwargs)
+    elif backend == "xla":
+        acc = serial_matmul_packed_acts(x2, w_packed, spec=spec, k=k)
+        out = _epilogue_xla(acc, scale, bias, relu=relu, out_dtype=out_dtype,
+                            requant=requant, requant_scale=requant_scale,
+                            emit_packed=emit_packed)
+    else:
+        raise ValueError(f"unknown packed-act backend {backend!r}")
+
+    if emit_packed and requant is not None:
+        return out.reshape((requant.bits,) + lead + (out.shape[-1],))
+    return out.reshape(lead + (out.shape[-1],))
 
 
 def serial_matmul_op(
@@ -41,9 +149,9 @@ def serial_matmul_op(
     requant: Optional[QuantSpec] = None,
     backend: str = "xla",
     interpret: bool = False,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 512,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
 ) -> jax.Array:
     """Dispatch one fused serial matmul. ``x``: (..., K) int codes."""
     lead = x.shape[:-1]
@@ -52,7 +160,18 @@ def serial_matmul_op(
         out = bitserial_matmul_pallas(
             x2, w_packed, scale, bias, spec=spec, k=k, relu=relu,
             out_dtype=out_dtype, requant=requant, interpret=interpret,
-            block_m=block_m, block_n=block_n, block_k=block_k)
+            block_m=block_m or 128, block_n=block_n or 128,
+            block_k=block_k or 512)
+    elif backend == "pallas_v2":
+        xp = pack_activations(x2, spec.a_bits)
+        # v1-compatible requant semantics: ``scale`` already folds the
+        # requant step, so the epilogue divides by 1.
+        out = serial_matmul_packed_op(
+            xp, w_packed, scale, bias, spec=spec, k=k, relu=relu,
+            out_dtype=out_dtype, requant=requant,
+            requant_scale=None if requant is None else jnp.asarray(1.0),
+            backend="pallas_v2", interpret=interpret, block_m=block_m,
+            block_n=block_n, block_k=block_k)
     elif backend in ("xla", "ref"):
         if backend == "ref":
             out = bitserial_matmul_ref(
@@ -94,11 +213,14 @@ def quantized_linear(
 ) -> jax.Array:
     """Full deployment linear: float acts → int codes → serial matmul →
     dequant. ``scale`` folds ``act_alpha * w_scale`` per output channel
-    (the scaler RAM contents)."""
+    (the scaler RAM contents). The digit plan is re-selected per spec
+    (:func:`repro.core.bitserial.plan_spec`) — radix is a kernel-internal
+    choice and never changes the integer result."""
     aspec = QuantSpec(a_bits, a_signed)
     codes = quantize_int(x, act_alpha, aspec)
-    spec = SerialSpec(a_bits=a_bits, w_bits=qw.bits, a_signed=a_signed,
-                      w_signed=qw.signed, radix_bits=radix_bits)
+    spec = plan_spec(SerialSpec(a_bits=a_bits, w_bits=qw.bits,
+                                a_signed=a_signed, w_signed=qw.signed,
+                                radix_bits=radix_bits))
     scale = jnp.asarray(act_alpha, jnp.float32) * jnp.asarray(qw.scale, jnp.float32)
     return serial_matmul_op(
         codes, qw.packed, scale, bias, spec=spec, k=qw.k, relu=relu,

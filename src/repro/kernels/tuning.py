@@ -1,0 +1,122 @@
+"""Cost-model-driven block-size autotuner for the v2 bit-serial matmul.
+
+The seed kernel ran every problem with fixed ``(128, 128, 512)`` blocks.
+FINN-R and SPEED both show low-precision throughput is won by tuning tile
+geometry per precision: the right block shape depends on the configured
+``a_bits``/``w_bits`` (they set the packed tile footprints and the number of
+digit-plane matmuls) as much as on M/K/N. This module enumerates candidate
+tiles, filters them by the VMEM working-set estimate, scores the survivors
+with the :mod:`repro.core.cost_model` roofline and picks the cheapest —
+including whether the hoisted digit-plane caches (weights / activations)
+fit.
+
+Selection is pure arithmetic (no compilation, no device), deterministic,
+and memoized in an in-process cache so a serving loop pays the enumeration
+once per (shape, spec) and every later call is a dict hit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core import bitops
+from repro.core.bitserial import SerialSpec
+from repro.core.cost_model import TPUConfig, kernel_cost, kernel_vmem_bytes
+
+__all__ = ["TileConfig", "choose_tile", "clear_cache", "cache_info"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """One tuned kernel configuration (kwargs for the v2 Pallas call)."""
+
+    block_m: int
+    block_n: int
+    block_k: int
+    cache_weights: bool
+    cache_acts: bool
+    cost: float = 0.0          # modeled seconds/call (diagnostic)
+    vmem_bytes: int = 0        # modeled VMEM working set (diagnostic)
+
+    def kernel_kwargs(self) -> dict:
+        return dict(block_m=self.block_m, block_n=self.block_n,
+                    block_k=self.block_k, cache_weights=self.cache_weights,
+                    cache_acts=self.cache_acts)
+
+
+_BM_CANDIDATES = (8, 16, 32, 64, 128, 256, 512)
+_BN_CANDIDATES = (32, 64, 128, 256, 512)     # %32: packed-output word axis
+_BK_CANDIDATES = (32, 64, 128, 256, 512, 1024)
+
+_cache: dict = {}
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _candidates(dim: int, options: Tuple[int, ...], mult: int):
+    """Candidate block sizes for one axis: every option up to the first one
+    that covers the (padded) axis in a single block."""
+    cap = _round_up(max(dim, 1), mult)
+    out = [b for b in options if b < cap]
+    covering = [b for b in options if b >= cap]
+    if covering:
+        out.append(covering[0])
+    return out or [options[0]]
+
+
+def choose_tile(m: int, k: int, n: int, spec: SerialSpec, *,
+                out_bits: Optional[int] = None,
+                tpu: TPUConfig = TPUConfig()) -> TileConfig:
+    """Pick (block_m, block_n, block_k, cache flags) for one matmul shape.
+
+    ``out_bits``: set when the fused requant-pack epilogue is used (the
+    packed output constrains ``block_n`` to multiples of 32 — which all
+    candidates already satisfy — and changes the output HBM term).
+    Results are memoized per (shape, spec, out_bits, tpu).
+    """
+    key = (m, k, n, spec, out_bits, tpu)
+    hit = _cache.get(key)
+    if hit is not None:
+        return hit
+
+    nd_a = bitops.num_digits(spec.a_bits, spec.radix_bits, spec.a_signed)
+    nd_w = bitops.num_digits(spec.w_bits, spec.radix_bits, spec.w_signed)
+    budget = int(tpu.vmem_bytes * tpu.vmem_budget_frac)
+
+    best: Optional[TileConfig] = None
+    for bm in _candidates(m, _BM_CANDIDATES, 8):
+        for bn in _candidates(n, _BN_CANDIDATES, 32):
+            for bk in _candidates(k, _BK_CANDIDATES, 32):
+                for cw, ca in ((True, True), (True, False),
+                               (False, True), (False, False)):
+                    kw = dict(a_bits=spec.a_bits, w_bits=spec.w_bits,
+                              nd_a=nd_a, nd_w=nd_w, bm=bm, bn=bn, bk=bk,
+                              cache_weights=cw, cache_acts=ca,
+                              out_bits=out_bits)
+                    vmem = kernel_vmem_bytes(m, k, n, **kw)
+                    if vmem > budget:
+                        continue
+                    cost = kernel_cost(m, k, n, **kw, tpu=tpu)
+                    cand = TileConfig(bm, bn, bk, cw, ca, cost, vmem)
+                    if best is None or cost < best.cost or (
+                            cost == best.cost
+                            and bm * bn * bk > (best.block_m * best.block_n
+                                                * best.block_k)):
+                        best = cand
+    if best is None:  # degenerate: nothing fit the budget — smallest tile
+        best = TileConfig(_BM_CANDIDATES[0], _BN_CANDIDATES[0],
+                          _BK_CANDIDATES[0], False, False, float("inf"),
+                          0)
+    _cache[key] = best
+    return best
+
+
+def clear_cache() -> None:
+    _cache.clear()
+
+
+def cache_info() -> dict:
+    return {"entries": len(_cache)}

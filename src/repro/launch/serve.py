@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models.transformer import (ModelConfig, decode_step, init_params,
-                                      pack_params, prefill)
+                                      pack_params, prefill, serve_policy)
 
 __all__ = ["Server", "GenRequest"]
 
@@ -35,10 +35,18 @@ class GenRequest:
 
 
 class Server:
-    """Static-batch server with slot-based continuous batching."""
+    """Static-batch server with slot-based continuous batching.
+
+    ``backend`` retargets the serial matmul at run time ('xla' | 'pallas' |
+    'pallas_v2') without repacking the weights — the v2 backend runs the
+    packed-activation kernel with cost-model-tuned block sizes.
+    """
 
     def __init__(self, cfg: ModelConfig, params=None, *, batch_slots: int = 4,
-                 max_len: int = 128, seed: int = 0, quantized: bool = True):
+                 max_len: int = 128, seed: int = 0, quantized: bool = True,
+                 backend: Optional[str] = None,
+                 interpret: Optional[bool] = None):
+        cfg = serve_policy(cfg, backend=backend, interpret=interpret)
         self.cfg = cfg
         self.max_len = max_len
         self.batch_slots = batch_slots
@@ -53,7 +61,12 @@ class Server:
             lambda p, c, t, pos: decode_step(p, c, t, pos, cfg))
 
     def generate(self, requests: List[GenRequest]) -> List[GenRequest]:
-        """Serve a batch of same-length-padded prompts."""
+        """Serve a batch of same-length-padded prompts.
+
+        The decode loop carries tokens **on device** — one host transfer at
+        the end, instead of a per-token ``int()`` sync every step (which
+        serialized the whole loop on dispatch latency).
+        """
         assert len(requests) <= self.batch_slots
         while len(requests) < self.batch_slots:  # pad with dummies
             requests = requests + [GenRequest(requests[0].prompt, 0)]
@@ -64,19 +77,19 @@ class Server:
         batch = {"tokens": jnp.asarray(toks)}
         logits, caches = self._prefill(self.params, batch)
         tok = jnp.argmax(logits, -1)[:, None]
-        n_new = max(r.max_new_tokens for r in requests)
-        outs = [[] for _ in requests]
-        for t in range(n_new):
-            for i in range(len(requests)):
-                if t < requests[i].max_new_tokens:
-                    outs[i].append(int(tok[i, 0]))
-            if t == n_new - 1:
-                break
+        n_new = max((r.max_new_tokens for r in requests), default=0)
+        steps = [tok]                       # device-side token columns
+        for t in range(1, n_new):
             logits, caches = self._decode(self.params, caches, tok,
-                                          jnp.int32(s + t))
+                                          jnp.int32(s + t - 1))
             tok = jnp.argmax(logits, -1)[:, None]
-        for r, o in zip(requests, outs):
-            r.out_tokens = o[:r.max_new_tokens]
+            steps.append(tok)
+        if n_new:
+            all_toks = np.asarray(jnp.concatenate(steps, axis=1))  # 1 sync
+        else:
+            all_toks = np.zeros((len(requests), 0), np.int32)
+        for i, r in enumerate(requests):
+            r.out_tokens = [int(v) for v in all_toks[i, :r.max_new_tokens]]
         return requests
 
 
@@ -86,10 +99,16 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--no-quant", action="store_true")
+    ap.add_argument("--backend", default=None,
+                    choices=["xla", "pallas", "pallas_v2"],
+                    help="serial-matmul backend (default: arch policy)")
+    ap.add_argument("--interpret", action="store_true",
+                    help="run pallas backends interpreted (CPU)")
     args = ap.parse_args()
     cfg = get_arch(args.arch).smoke
     server = Server(cfg, batch_slots=args.batch, max_len=64,
-                    quantized=not args.no_quant)
+                    quantized=not args.no_quant, backend=args.backend,
+                    interpret=args.interpret or None)
     rng = np.random.RandomState(0)
     reqs = [GenRequest(rng.randint(0, cfg.vocab_size, (8,)).astype(np.int32),
                        args.new_tokens) for _ in range(args.batch)]

@@ -24,9 +24,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitops
-from repro.core.bitserial import SerialSpec, serial_matmul_packed
+from repro.core.bitserial import SerialSpec, plan_spec
 from repro.core.quant import (QuantSpec, init_alpha, lsq_fake_quant,
                               quantize_int, qrange)
+from repro.kernels.ops import (pack_activations, serial_matmul_op,
+                               serial_matmul_packed_op)
 
 __all__ = ["QuantPolicy", "qdense_init", "qdense", "pack_qdense",
            "rms_norm", "layer_norm", "rotary", "apply_rotary",
@@ -47,7 +49,11 @@ class QuantPolicy:
     w_signed: bool = True
     a_signed: bool = True
     radix_bits: int = 7
-    backend: str = "xla"  # 'xla' for dry-run/CPU; 'pallas' on real TPU
+    # 'xla' for dry-run/CPU; 'pallas' (v1) or 'pallas_v2' (packed-activation
+    # kernel + tile autotuner) on real TPU
+    backend: str = "xla"
+    interpret: bool = False   # run pallas backends interpreted (CPU tests)
+    pack_acts: bool = False   # carry activations bit-packed into the matmul
 
     def spec(self) -> SerialSpec:
         return SerialSpec(self.a_bits, self.w_bits, self.a_signed,
@@ -76,15 +82,28 @@ def qdense_init(key, k: int, n: int, policy: QuantPolicy, *, bias: bool = False,
 def qdense(p: dict, x: jax.Array, policy: QuantPolicy) -> jax.Array:
     """Apply a quant-aware dense layer; dispatches on param structure."""
     if "w_packed" in p:  # deployment params (serial path)
-        spec = policy.spec()
+        # digit-plan selection: radix is a kernel-internal choice and never
+        # changes the exact integer result (DESIGN.md §2.4)
+        spec = plan_spec(policy.spec())
         codes = quantize_int(x, p["alpha_a"], QuantSpec(policy.a_bits,
                                                         policy.a_signed))
-        acc = serial_matmul_packed(codes, p["w_packed"], spec=spec,
-                                   k=x.shape[-1])
-        out = acc.astype(x.dtype) * (p["scale"] * p["alpha_a"]).astype(x.dtype)
-        if "b" in p:
-            out = out + p["b"].astype(x.dtype)
-        return out
+        scale = (p["scale"] * p["alpha_a"]).astype(jnp.float32)
+        if policy.pack_acts or policy.backend == "pallas_v2":
+            # v2 deployment path: activations travel bit-packed, so their
+            # HBM bytes scale with a_bits (like the FPGA activation RAM)
+            xp = pack_activations(codes, spec.a_bits)
+            out = serial_matmul_packed_op(
+                xp, p["w_packed"], scale, p.get("b"), spec=spec,
+                k=x.shape[-1], out_dtype=x.dtype,
+                backend="pallas_v2" if policy.backend.startswith("pallas")
+                else "xla",
+                interpret=policy.interpret)
+        else:
+            out = serial_matmul_op(
+                codes, p["w_packed"], scale, p.get("b"), spec=spec,
+                k=x.shape[-1], out_dtype=x.dtype, backend=policy.backend,
+                interpret=policy.interpret)
+        return out.astype(x.dtype)
     w = p["w"]
     if policy.mode == "qat" and "alpha_w" in p:
         wspec = QuantSpec(policy.w_bits, policy.w_signed, per_channel=True)

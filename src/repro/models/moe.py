@@ -79,7 +79,8 @@ def _expert_matmul(p: dict, x: jax.Array, policy: QuantPolicy) -> jax.Array:
     if aa is not None:
         aa_b = aa[None, :, None, None] if batched else aa[:, None, None]
     if "w_packed" in p:
-        spec = policy.spec()
+        from repro.core.bitserial import plan_spec
+        spec = plan_spec(policy.spec())  # radix-invariant digit plan
         codes = quantize_int(x, aa_b,
                              QuantSpec(policy.a_bits, policy.a_signed))
         per_e = lambda c, wp: serial_matmul_packed(c, wp, spec=spec,

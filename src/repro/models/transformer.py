@@ -32,7 +32,7 @@ from repro.models.ssm import (SSMConfig, init_ssm_cache, ssm_apply,
 
 __all__ = ["ModelConfig", "GroupSpec", "layer_groups", "init_params",
            "forward", "loss_fn", "prefill", "decode_step", "init_caches",
-           "pack_params"]
+           "pack_params", "serve_policy"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -500,6 +500,32 @@ def decode_step(params, caches, tokens, pos, cfg: ModelConfig):
     else:
         logits = qdense(params["head"], x, QuantPolicy(mode="none"))
     return logits[:, 0], caches
+
+
+def serve_policy(cfg: ModelConfig, *, backend: Optional[str] = None,
+                 interpret: Optional[bool] = None,
+                 pack_acts: Optional[bool] = None) -> ModelConfig:
+    """Return ``cfg`` with its QuantPolicy retargeted for deployment.
+
+    ``backend``: 'xla' | 'pallas' | 'pallas_v2'. The v2 backend carries
+    activations bit-packed into the matmul (HBM bytes scale with ``a_bits``)
+    and block sizes come from the cost-model autotuner
+    (:mod:`repro.kernels.tuning`). Like the per-MVU CSR precision settings,
+    this is a run-time choice: the *packed weights* never change, only the
+    step function recompiles.
+    """
+    pol = cfg.policy
+    updates = {}
+    if backend is not None:
+        updates["backend"] = backend
+    if interpret is not None:
+        updates["interpret"] = interpret
+    if pack_acts is not None:
+        updates["pack_acts"] = pack_acts
+    if not updates:
+        return cfg
+    return dataclasses.replace(cfg,
+                               policy=dataclasses.replace(pol, **updates))
 
 
 def pack_params(params, cfg: ModelConfig):

@@ -1,0 +1,261 @@
+"""Minimal fallback shim for ``hypothesis`` on bare interpreters.
+
+The real property-testing library is preferred (``pip install -r
+requirements-dev.txt``); when it is unavailable this stub implements just
+enough of the API surface the test-suite uses — ``given``, ``settings``,
+``assume``, ``example``, ``HealthCheck`` and the ``strategies`` used here
+(``integers``, ``booleans``, ``sampled_from``, ``lists``, ``floats``,
+``composite``) — drawing deterministic pseudo-random examples instead of
+shrinking counterexamples. ``tests/conftest.py`` installs it into
+``sys.modules`` only if ``import hypothesis`` fails.
+"""
+
+from __future__ import annotations
+
+import functools  # noqa: F401  (kept for composite)
+import hashlib
+import random
+import sys
+import types
+
+__version__ = "0.0-stub"
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume(False): skip this example."""
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class HealthCheck:
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    function_scoped_fixture = "function_scoped_fixture"
+
+
+class SearchStrategy:
+    """Base strategy: subclasses implement ``do_draw(rng)``."""
+
+    def do_draw(self, rng: random.Random):
+        raise NotImplementedError
+
+    def map(self, f):
+        return _MappedStrategy(self, f)
+
+    def filter(self, pred):
+        return _FilteredStrategy(self, pred)
+
+    def example(self):
+        return self.do_draw(random.Random(0))
+
+
+class _MappedStrategy(SearchStrategy):
+    def __init__(self, base, f):
+        self.base, self.f = base, f
+
+    def do_draw(self, rng):
+        return self.f(self.base.do_draw(rng))
+
+
+class _FilteredStrategy(SearchStrategy):
+    def __init__(self, base, pred):
+        self.base, self.pred = base, pred
+
+    def do_draw(self, rng):
+        for _ in range(100):
+            v = self.base.do_draw(rng)
+            if self.pred(v):
+                return v
+        raise _Unsatisfied()
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value=None, max_value=None):
+        self.lo = -(2 ** 31) if min_value is None else min_value
+        self.hi = 2 ** 31 - 1 if max_value is None else max_value
+
+    def do_draw(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _Booleans(SearchStrategy):
+    def do_draw(self, rng):
+        return rng.random() < 0.5
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value=None, max_value=None, allow_nan=False,
+                 allow_infinity=False, width=64):
+        self.lo = -1e9 if min_value is None else min_value
+        self.hi = 1e9 if max_value is None else max_value
+
+    def do_draw(self, rng):
+        return rng.uniform(self.lo, self.hi)
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def do_draw(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements, min_size=0, max_size=None, unique=False):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+        self.unique = unique
+
+    def do_draw(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        out = []
+        for _ in range(n * (20 if self.unique else 1)):
+            if len(out) == n:
+                break
+            v = self.elements.do_draw(rng)
+            if self.unique and v in out:
+                continue
+            out.append(v)
+        return out
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, *strategies):
+        self.strategies = strategies
+
+    def do_draw(self, rng):
+        return tuple(s.do_draw(rng) for s in self.strategies)
+
+
+class _Just(SearchStrategy):
+    def __init__(self, value):
+        self.value = value
+
+    def do_draw(self, rng):
+        return self.value
+
+
+class _OneOf(SearchStrategy):
+    def __init__(self, *strategies):
+        self.strategies = strategies
+
+    def do_draw(self, rng):
+        return rng.choice(self.strategies).do_draw(rng)
+
+
+class _Composite(SearchStrategy):
+    def __init__(self, fn, args, kwargs):
+        self.fn, self.args, self.kwargs = fn, args, kwargs
+
+    def do_draw(self, rng):
+        draw = lambda strategy: strategy.do_draw(rng)
+        return self.fn(draw, *self.args, **self.kwargs)
+
+
+def composite(fn):
+    @functools.wraps(fn)
+    def builder(*args, **kwargs):
+        return _Composite(fn, args, kwargs)
+
+    return builder
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.SearchStrategy = SearchStrategy
+strategies.integers = _Integers
+strategies.booleans = _Booleans
+strategies.floats = _Floats
+strategies.sampled_from = _SampledFrom
+strategies.lists = _Lists
+strategies.tuples = _Tuples
+strategies.just = _Just
+strategies.one_of = _OneOf
+strategies.composite = composite
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None,
+             suppress_health_check=(), **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+settings.register_profile = staticmethod(lambda *a, **k: None)
+settings.load_profile = staticmethod(lambda *a, **k: None)
+
+
+def example(*args, **kwargs):
+    def deco(fn):
+        fn._stub_examples = getattr(fn, "_stub_examples", []) + [
+            (args, kwargs)]
+        return fn
+
+    return deco
+
+
+def given(*gargs, **gkwargs):
+    def deco(fn):
+        inner = fn
+        max_examples = getattr(inner, "_stub_max_examples",
+                               _DEFAULT_MAX_EXAMPLES)
+        # deterministic per-test seed so failures reproduce run-to-run
+        seed0 = int(hashlib.sha1(
+            inner.__qualname__.encode()).hexdigest()[:8], 16)
+
+        def runner():
+            # explicit @example cases run first
+            for eargs, ekwargs in getattr(inner, "_stub_examples", []):
+                inner(*eargs, **ekwargs)
+            ran = 0
+            for trial in range(max_examples * 5):
+                if ran >= max_examples:
+                    break
+                rng = random.Random(seed0 + trial)
+                try:
+                    drawn = [s.do_draw(rng) for s in gargs]
+                    dkw = {name: s.do_draw(rng)
+                           for name, s in gkwargs.items()}
+                    inner(*drawn, **dkw)
+                    ran += 1
+                except _Unsatisfied:
+                    continue
+
+        # NOTE: deliberately not functools.wraps — __wrapped__ would make
+        # pytest read the inner signature and demand fixtures for the
+        # strategy-drawn parameters. Copy the identity attrs only.
+        runner.__name__ = inner.__name__
+        runner.__qualname__ = inner.__qualname__
+        runner.__doc__ = inner.__doc__
+        runner.__module__ = inner.__module__
+        runner.hypothesis = types.SimpleNamespace(inner_test=inner)
+        return runner
+
+    return deco
+
+
+def _install():
+    """Register this stub as ``hypothesis`` in ``sys.modules``."""
+    mod = types.ModuleType("hypothesis")
+    mod.__version__ = __version__
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.example = example
+    mod.HealthCheck = HealthCheck
+    mod.strategies = strategies
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies
+    return mod
