@@ -1,10 +1,11 @@
 """Benchmark harness — one function per paper table + kernel micro-bench +
 roofline summary. Prints ``name,us_per_call,derived`` CSV rows and writes a
 machine-readable ``BENCH_kernels.json`` (name → us_per_call + derived) so
-the perf trajectory is tracked PR-over-PR.
+the perf trajectory is tracked PR-over-PR. Conv-kernel + ResNet9
+end-to-end rows are additionally dumped to ``BENCH_conv.json``.
 
-Run: PYTHONPATH=src python -m benchmarks.run [--only kernels,tables]
-     [--json BENCH_kernels.json]
+Run: PYTHONPATH=src python -m benchmarks.run [--only kernels,tables,conv]
+     [--json BENCH_kernels.json] [--conv-json BENCH_conv.json]
 """
 
 from __future__ import annotations
@@ -17,12 +18,15 @@ import timeit
 import numpy as np
 
 _ROWS: dict = {}
+_CONV_KEYS: list = []
 
 
-def _emit(name: str, us: float, derived: str = "") -> None:
-    """One result row: CSV to stdout + recorded for the JSON dump."""
+def _emit(name: str, us: float, derived: str = "", conv: bool = False) -> None:
+    """One result row: CSV to stdout + recorded for the JSON dump(s)."""
     print(f"{name},{us:.0f},{derived}")
     _ROWS[name] = {"us_per_call": round(float(us), 1), "derived": derived}
+    if conv:
+        _CONV_KEYS.append(name)
 
 
 def _time_us(fn, n=5, warmup=1, repeat=3):
@@ -240,6 +244,164 @@ def bench_tuner():
           f"{tuning.cache_info()['entries']} entries")
 
 
+def _resnet9_conv_shapes():
+    """(name, c_in, c_out, input H=W, stride) of every hidden conv, derived
+    from the ResNet9Config the model actually runs (3x3 pad-1 convs, 2x2
+    pools after the flagged stages) so benchmark and model cannot drift."""
+    from repro.models.resnet import ResNet9Config
+    cfg = ResNet9Config()
+    shapes, h = [], 32
+    for (name, ci, co, stride, pool) in cfg.layers:
+        shapes.append((name, ci, co, h, stride))
+        h = (h - 1) // stride + 1
+        if pool:
+            h //= 2
+    return shapes
+
+
+def bench_conv_layers():
+    """ResNet9 W2A2 conv layers: the seed path (f32 im2col round-trip +
+    v1 serial GEMM) vs the implicit-GEMM packed path (tap-walk dataflow of
+    the conv kernel, XLA lowering — CPU timings indicative; the TPU target
+    runs kernels/bitserial_conv.py)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import bitops
+    from repro.core.bitserial import SerialSpec, plan_spec, serial_matmul
+    from repro.kernels.ops import pack_activations, serial_conv2d_packed_op
+    spec = plan_spec(SerialSpec(2, 2, True, True, 7))
+    rng = np.random.RandomState(0)
+
+    def seed_conv(x, w, stride):
+        # the seed serial_conv2d: f32 patch extraction (a ~9x blown patch
+        # tensor through HBM) -> cast back -> one big serial GEMM
+        patches = jax.lax.conv_general_dilated_patches(
+            x.astype(jnp.float32), (3, 3), (stride, stride),
+            [(1, 1), (1, 1)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(jnp.int32)
+        wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(-1, w.shape[-1])
+        return serial_matmul(patches, wmat, spec)
+
+    tot_seed = tot_imp = 0.0
+    for (name, ci, co, hw, stride) in _resnet9_conv_shapes():
+        x = jnp.asarray(rng.randint(-2, 2, (8, hw, hw, ci)), jnp.int32)
+        w = jnp.asarray(rng.randint(-2, 2, (3, 3, ci, co)), jnp.int32)
+        xp = pack_activations(x, 2)
+        wp = bitops.pack_bitplanes(
+            bitops.pad_to(bitops.to_bitplanes(w, 2), 32, axis=3), axis=3)
+        scale = jnp.ones(co, jnp.float32)
+        f_seed = jax.jit(lambda a, b, s=stride: seed_conv(a, b, s))
+        f_imp = jax.jit(lambda a, b, s=stride, c=ci: serial_conv2d_packed_op(
+            a, b, scale, None, spec=spec, ci=c, stride=s, padding=1,
+            backend="xla"))
+        us_seed, us_imp = _time_interleaved_us([
+            lambda: jax.block_until_ready(f_seed(x, w)),
+            lambda: jax.block_until_ready(f_imp(xp, wp)),
+        ], n=1, rounds=3)
+        tot_seed += us_seed
+        tot_imp += us_imp
+        _emit(f"bench_conv_W2A2_{name}_seed_im2col", us_seed,
+              f"8x{hw}x{hw}x{ci}->{co} s{stride}", conv=True)
+        _emit(f"bench_conv_W2A2_{name}_implicit", us_imp,
+              f"{us_seed / us_imp:.2f}x vs seed", conv=True)
+    _emit("bench_conv_W2A2_resnet9_stack_speedup", 0,
+          f"{tot_seed / tot_imp:.2f}x vs im2col+v1 serial GEMM "
+          f"(stack {tot_seed:.0f}us -> {tot_imp:.0f}us)", conv=True)
+
+
+def bench_conv_pallas_kernel():
+    """Pallas kernels in interpret mode, one W2A2 conv stage: seed recipe
+    (host int im2col + v1 serial matmul kernel) vs the implicit-GEMM conv
+    kernel (patch generation inside the kernel, digit-plane caches)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import bitops
+    from repro.core.bitserial import SerialSpec, plan_spec
+    from repro.kernels.bitserial_matmul import bitserial_matmul_pallas
+    from repro.kernels.bitserial_conv import bitserial_conv2d_v2_pallas
+    spec = plan_spec(SerialSpec(2, 2, True, True, 7))
+    rng = np.random.RandomState(0)
+    n, hw, ci, co, stride = 2, 8, 64, 64, 1
+    x = jnp.asarray(rng.randint(-2, 2, (n, hw, hw, ci)), jnp.int32)
+    w = jnp.asarray(rng.randint(-2, 2, (3, 3, ci, co)), jnp.int32)
+    scale = np.ones(co, np.float32)
+    from repro.kernels.ops import pack_activations
+    xp = pack_activations(x, 2)
+    wp_conv = bitops.pack_bitplanes(
+        bitops.pad_to(bitops.to_bitplanes(w, 2), 32, axis=3), axis=3)
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(-1, co)
+    wp_mat = bitops.pack_bitplanes(
+        bitops.pad_to(bitops.to_bitplanes(wmat, 2), 32, axis=1), axis=1)
+    k = 9 * ci
+
+    def seed_kernel(xx):
+        patches = jax.lax.conv_general_dilated_patches(
+            xx.astype(jnp.float32), (3, 3), (stride, stride),
+            [(1, 1), (1, 1)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(jnp.int32)
+        return bitserial_matmul_pallas(
+            patches.reshape(-1, k), wp_mat, scale, None, spec=spec, k=k,
+            block_m=32, block_n=32, block_k=192, interpret=True)
+
+    f_v1 = jax.jit(seed_kernel)
+    f_v2 = jax.jit(lambda a: bitserial_conv2d_v2_pallas(
+        a, wp_conv, scale, None, spec=spec, ci=ci, stride=stride,
+        padding=1, block_co=32, block_nb=2, interpret=True))
+    us_v1, us_v2 = _time_interleaved_us([
+        lambda: jax.block_until_ready(f_v1(x)),
+        lambda: jax.block_until_ready(f_v2(xp)),
+    ], n=1, rounds=3)
+    tag = f"{n}x{hw}x{hw}x{ci}->{co}"
+    _emit(f"bench_conv_pallas_W2A2_seed_{tag}", us_v1,
+          "im2col + v1 matmul kernel, interpret", conv=True)
+    _emit(f"bench_conv_pallas_W2A2_v2_{tag}", us_v2,
+          f"implicit-GEMM conv kernel, interpret; "
+          f"{us_v1 / us_v2:.2f}x vs seed", conv=True)
+
+
+def bench_resnet9_e2e():
+    """ResNet9/CIFAR10 end-to-end (paper Tables 2/3 workload, batch 4):
+    seed quantized forward (per-call weight re-quantization + f32 im2col)
+    vs the hoisted forward vs the packed deployment path (implicit-GEMM,
+    stages chained in packed format)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models.resnet import (ResNet9Config, resnet9_init,
+                                     resnet9_forward, resnet9_pack,
+                                     resnet9_forward_packed,
+                                     resnet9_quantize_weights)
+    cfg = ResNet9Config()
+    params = resnet9_init(jax.random.PRNGKey(0), cfg)
+    images = jnp.asarray(np.random.RandomState(0).rand(4, 32, 32, 3),
+                         jnp.float32)
+    t0 = time.time()
+    qw = resnet9_quantize_weights(params, cfg)
+    qw = jax.tree_util.tree_map(jax.block_until_ready, qw)
+    us_quant = (time.time() - t0) * 1e6
+    t0 = time.time()
+    packed = resnet9_pack(params, images, cfg)
+    packed = jax.tree_util.tree_map(jax.block_until_ready, packed)
+    us_pack = (time.time() - t0) * 1e6
+    f_seed = jax.jit(lambda p, im: resnet9_forward(p, im, cfg))
+    f_hoist = jax.jit(lambda p, im, q: resnet9_forward(p, im, cfg,
+                                                       qweights=q))
+    f_packed = jax.jit(lambda p, im: resnet9_forward_packed(
+        p, im, cfg, backend="xla"))
+    us_seed, us_hoist, us_packed = _time_interleaved_us([
+        lambda: jax.block_until_ready(f_seed(params, images)),
+        lambda: jax.block_until_ready(f_hoist(params, images, qw)),
+        lambda: jax.block_until_ready(f_packed(packed, images)),
+    ], n=1, rounds=3)
+    _emit("bench_resnet9_W2A2_seed_forward", us_seed,
+          "per-call weight quant + f32 im2col, batch 4", conv=True)
+    _emit("bench_resnet9_W2A2_hoisted_forward", us_hoist,
+          f"one-time weight quant ({us_quant:.0f}us); "
+          f"{us_seed / us_hoist:.2f}x vs seed", conv=True)
+    _emit("bench_resnet9_W2A2_packed_forward", us_packed,
+          f"implicit-GEMM packed chain (pack {us_pack:.0f}us one-time); "
+          f"{us_seed / us_packed:.2f}x vs seed", conv=True)
+
+
 def bench_quantized_lm_serve():
     """Tokens/s of the smoke LM through the full quantized serve path."""
     from repro.configs import get_arch
@@ -286,6 +448,7 @@ GROUPS = {
     "tables": [table2_model_sizes, table3_resnet9_cycles, table5_cnv_fps,
                table6_resnet50],
     "kernels": [bench_serial_matmul, bench_pallas_kernel, bench_tuner],
+    "conv": [bench_conv_layers, bench_conv_pallas_kernel, bench_resnet9_e2e],
     "serve": [bench_quantized_lm_serve],
     "roofline": [roofline_summary],
 }
@@ -298,6 +461,9 @@ def main(argv=None) -> None:
                          f"({'/'.join(GROUPS)}); default: all")
     ap.add_argument("--json", default="BENCH_kernels.json",
                     help="path for the machine-readable dump "
+                         "('' disables)")
+    ap.add_argument("--conv-json", default="BENCH_conv.json",
+                    help="path for the conv/ResNet9 rows dump "
                          "('' disables)")
     args = ap.parse_args(argv)
     groups = list(GROUPS) if not args.only else [
@@ -314,6 +480,11 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump(_ROWS, f, indent=1, sort_keys=True)
         print(f"# wrote {len(_ROWS)} rows to {args.json}")
+    if args.conv_json and _CONV_KEYS:
+        conv_rows = {k: _ROWS[k] for k in _CONV_KEYS}
+        with open(args.conv_json, "w") as f:
+            json.dump(conv_rows, f, indent=1, sort_keys=True)
+        print(f"# wrote {len(conv_rows)} rows to {args.conv_json}")
 
 
 if __name__ == "__main__":

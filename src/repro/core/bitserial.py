@@ -33,7 +33,8 @@ import numpy as np
 from repro.core import bitops
 
 __all__ = ["SerialSpec", "serial_matmul", "serial_matmul_packed",
-           "serial_matmul_packed_acts", "serial_conv2d", "plan_spec"]
+           "serial_matmul_packed_acts", "serial_conv2d",
+           "serial_conv2d_packed_acts", "conv_out_hw", "plan_spec"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -256,6 +257,29 @@ def serial_matmul_packed_acts(
     return _digit_combine(xd, wd, s)
 
 
+def conv_out_hw(h: int, w: int, fh: int, fw: int, stride: int,
+                padding: int) -> tuple:
+    """Output spatial extent of a VALID conv over padded input."""
+    ho = (h + 2 * padding - fh) // stride + 1
+    wo = (w + 2 * padding - fw) // stride + 1
+    return ho, wo
+
+
+def _tap_slices(x: jax.Array, fh: int, fw: int, stride: int, ho: int,
+                wo: int):
+    """Yield ((i_fh, i_fw), slice) pairs: the (N, Ho, Wo, Ci) input window
+    of each filter tap, taken by pure integer strided slicing — the AGU's
+    per-tap walk, never a materialized patch tensor."""
+    for i_fh in range(fh):
+        for i_fw in range(fw):
+            yield (i_fh, i_fw), jax.lax.slice(
+                x,
+                (0, i_fh, i_fw, 0),
+                (x.shape[0], i_fh + (ho - 1) * stride + 1,
+                 i_fw + (wo - 1) * stride + 1, x.shape[3]),
+                (1, stride, stride, 1))
+
+
 def serial_conv2d(
     x: jax.Array,
     w: jax.Array,
@@ -268,23 +292,74 @@ def serial_conv2d(
 
     The MVU executes convs as AGU-driven walks over 64x64 GEMV tiles
     (paper §3.1.3); the JAX equivalent is im2col + the same serial GEMM.
-    ``x``: (N, H, W, C_i) ints; ``w``: (F_H, F_W, C_i, C_o) ints.
+    Patches are extracted by integer strided slicing — no float32
+    round-trip (the seed's ``conv_general_dilated_patches`` path cast to
+    f32 and back, an extra 9x-blown conv plus a precision hazard for wide
+    accumulations). ``x``: (N, H, W, C_i) ints; ``w``: (F_H, F_W, C_i, C_o).
     """
     n, h, wdt, ci = x.shape
     fh, fw, _, co = w.shape
+    x = x.astype(jnp.int32)
     x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
-    ho = (h + 2 * padding - fh) // stride + 1
-    wo = (wdt + 2 * padding - fw) // stride + 1
-    # im2col: (N, Ho, Wo, FH*FW*Ci) — the NHWC-innermost layout of §3.1.2.
-    patches = jax.lax.conv_general_dilated_patches(
-        x.astype(jnp.float32),
-        filter_shape=(fh, fw),
-        window_strides=(stride, stride),
-        padding="VALID",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-    ).astype(jnp.int32)
-    # conv_general_dilated_patches returns features as C*FH*FW (channel-major);
-    # reorder w to match: (Ci, FH, FW, Co) -> (Ci*FH*FW, Co)
-    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(fh * fw * ci, co)
-    out = serial_matmul(patches, wmat, spec)
+    ho, wo = conv_out_hw(h, wdt, fh, fw, stride, padding)
+    # im2col in integer dtype, tap-major feature order (FH, FW, Ci) — matches
+    # HWIO's natural reshape, so no weight transpose is needed.
+    patches = jnp.concatenate(
+        [s for _, s in _tap_slices(x, fh, fw, stride, ho, wo)], axis=-1)
+    wmat = w.reshape(fh * fw * ci, co)
+    out = serial_matmul(patches.reshape(n * ho * wo, fh * fw * ci), wmat, spec)
     return out.reshape(n, ho, wo, co)
+
+
+def serial_conv2d_packed_acts(
+    x_packed: jax.Array,
+    w_packed: jax.Array,
+    *,
+    spec: SerialSpec,
+    ci: int,
+    stride: int = 1,
+    padding: int = 1,
+) -> jax.Array:
+    """Implicit-GEMM serial conv with **both operands bit-packed** — the XLA
+    oracle of :func:`repro.kernels.bitserial_conv.bitserial_conv2d_v2_pallas`.
+
+    ``x_packed``: (a_bits, N, H, W, ceil(Ci/32)) uint32 — NHWC activations
+    packed along the channel (lane) axis, the exact format
+    :func:`repro.kernels.ops.pack_activations` emits. ``w_packed``:
+    (w_bits, FH, FW, ceil(Ci/32), Co) uint32. Returns the exact int32
+    conv accumulator (N, Ho, Wo, Co).
+
+    The reduction K = FH*FW*Ci is walked one filter row at a time: the f_h
+    rows come from strided slices and the FW taps of a row merge into a
+    single digit-plane GEMM of width FW*Ci, mirroring the paper's §3.1.3
+    AGU tile walks. The largest intermediate is one row's tap gather
+    (N, Ho, Wo, FW*Ci) — bounded at FW x one activation map, never the
+    FH*FW x im2col patch tensor (and the Pallas kernel materializes
+    nothing at all). Digit planes are assembled int8-only on both sides
+    via :func:`digits_from_planes`.
+    """
+    ba, n, h, wdt, _ = x_packed.shape
+    bw, fh, fw, _, co = w_packed.shape
+    s = spec.radix_bits
+    a_planes = bitops.unpack_bitplanes(x_packed, ci, axis=-1)
+    w_planes = bitops.unpack_bitplanes(w_packed, ci, axis=3)
+    xd = digits_from_planes(a_planes, spec.a_bits, s, spec.a_signed)
+    wd = digits_from_planes(w_planes, spec.w_bits, s, spec.w_signed)
+    # spatial zero padding on digit planes: value 0 has all-zero digits
+    xd = jnp.pad(xd, ((0, 0), (0, 0), (padding, padding),
+                      (padding, padding), (0, 0)))
+    ho, wo = conv_out_hw(h, wdt, fh, fw, stride, padding)
+    nd_w = wd.shape[0]
+    out = None
+    for i_fh in range(fh):
+        cols = [jax.lax.slice(
+            xd,
+            (0, 0, i_fh, i_fw, 0),
+            (xd.shape[0], n, i_fh + (ho - 1) * stride + 1,
+             i_fw + (wo - 1) * stride + 1, ci),
+            (1, 1, stride, stride, 1)) for i_fw in range(fw)]
+        xrow = jnp.concatenate(cols, axis=-1)          # (nd_a,N,Ho,Wo,FW*Ci)
+        wrow = wd[:, i_fh].reshape(nd_w, fw * ci, co)  # K-order (f_w, c_i)
+        p = _digit_combine(xrow, wrow, s)
+        out = p if out is None else out + p
+    return out

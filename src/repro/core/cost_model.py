@@ -29,7 +29,8 @@ from repro.core.mvu import LANES, MVU_COUNT
 __all__ = ["HWConfig", "ConvLayer", "LinearLayer", "layer_cycles",
            "pipelined_fps", "distributed_fps", "network_cycles",
            "RESNET9_CIFAR10", "CNV_CIFAR10", "resnet50_layers",
-           "TPUConfig", "kernel_vmem_bytes", "kernel_cost"]
+           "TPUConfig", "kernel_vmem_bytes", "kernel_cost",
+           "conv_kernel_vmem_bytes", "conv_kernel_cost"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -218,6 +219,89 @@ def kernel_cost(m: int, k: int, n: int, *, a_bits: int, w_bits: int,
     w_asm = (w_bits + nd_w) * kp * np_ * (1 if cache_weights else n_i)
     a_asm = (a_bits + nd_a) * mp * kp * (1 if cache_acts else n_j)
     epilogue = mp * np_ * (3 + (out_bits or 0))
+    vpu = w_asm + a_asm + epilogue
+
+    return max(hbm / tpu.hbm_bw, macs / tpu.int8_macs) + vpu / tpu.vpu_ops
+
+
+# --------------------------------------------------------------------------
+# TPU implicit-GEMM conv kernel cost model (kernels/bitserial_conv.py)
+# --------------------------------------------------------------------------
+
+def _conv_geom(n, h, w, ci, fh, fw, stride, padding, bnb, bco, co):
+    ho = (h + 2 * padding - fh) // stride + 1
+    wo = (w + 2 * padding - fw) // stride + 1
+    hp = h + 2 * padding
+    wp = (fw - 1) + wo * stride
+    ciw = -(-ci // 32)
+    n_nb = -(-n // bnb)
+    n_j = -(-co // bco)
+    return ho, wo, hp, wp, ciw, n_nb, n_j
+
+
+def conv_kernel_vmem_bytes(n: int, h: int, w: int, ci: int, co: int, *,
+                           fh: int, fw: int, stride: int, padding: int,
+                           a_bits: int, w_bits: int, nd_a: int, nd_w: int,
+                           bnb: int, bco: int, cache_weights: bool,
+                           cache_acts: bool,
+                           out_bits: Optional[int] = None) -> int:
+    """VMEM working set of one implicit-GEMM conv invocation (bytes).
+
+    Same accounting as :func:`kernel_vmem_bytes`: BlockSpec-pipelined
+    buffers double-buffered (x2); scratches (accumulator + digit-plane
+    caches + the in-register assembled row/tap planes) single instances.
+    """
+    ho, wo, hp, wp, ciw, n_nb, n_j = _conv_geom(
+        n, h, w, ci, fh, fw, stride, padding, bnb, bco, co)
+    ci_pad = ciw * 32
+    x_tile = a_bits * bnb * wp * ciw * 4          # one packed input row
+    w_tile = w_bits * fw * ciw * bco * 4          # one packed filter-row tap
+    out_tile = (out_bits * bnb * wo * (bco // 32) * 4 if out_bits
+                else bnb * wo * bco * 4)
+    pipelined = 2 * (x_tile + w_tile + out_tile + 2 * bco * 4 + 4)
+    acc = bnb * wo * bco * 4
+    # assembled digit planes live in registers/VMEM even when not cached
+    live = nd_a * bnb * wp * ci_pad + nd_w * fw * ci_pad * bco
+    w_scr = fh * nd_w * fw * ci_pad * bco if cache_weights else 0
+    a_scr = n_nb * hp * nd_a * bnb * wp * ci_pad if cache_acts else 0
+    return pipelined + acc + live + w_scr + a_scr
+
+
+def conv_kernel_cost(n: int, h: int, w: int, ci: int, co: int, *,
+                     fh: int, fw: int, stride: int, padding: int,
+                     a_bits: int, w_bits: int, nd_a: int, nd_w: int,
+                     bnb: int, bco: int, cache_weights: bool,
+                     cache_acts: bool, out_bits: Optional[int] = None,
+                     tpu: TPUConfig = TPUConfig()) -> float:
+    """Modeled seconds per implicit-GEMM conv call — roofline over HBM +
+    MXU plus a VPU term for digit-plane assembly.
+
+    The hoisting shows up exactly as in :func:`kernel_cost`: cached
+    weight-tap planes are assembled once per (Co-block, f_h) instead of
+    once per grid step; cached activation rows once per input row instead
+    of once per (Co-block, output-row, f_h) visit.
+    """
+    ho, wo, hp, wp, ciw, n_nb, n_j = _conv_geom(
+        n, h, w, ci, fh, fw, stride, padding, bnb, bco, co)
+    ci_pad = ciw * 32
+    n_m = n_nb * ho
+    steps = n_j * n_m * fh
+
+    # HBM: BlockSpec re-fetches a tile each grid step it is mapped
+    act_bytes = steps * a_bits * bnb * wp * ciw * 4
+    w_bytes = steps * w_bits * fw * ciw * bco * 4
+    out_bytes = (out_bits * n_nb * bnb * ho * wo * (n_j * bco // 32) * 4
+                 if out_bits else n_nb * bnb * ho * wo * n_j * bco * 4)
+    hbm = act_bytes + w_bytes + out_bytes
+
+    macs = float(nd_a * nd_w) * steps * fw * (bnb * wo) * ci_pad * bco
+
+    # digit-plane assembly (unpack shifts + int8 scale-adds), VPU-bound
+    tap_work = (w_bits + nd_w) * fw * ci_pad * bco
+    row_work = (a_bits + nd_a) * bnb * wp * ci_pad
+    w_asm = tap_work * n_j * fh * (1 if cache_weights else n_m)
+    a_asm = row_work * n_m * fh * (1 if cache_acts else n_j)
+    epilogue = n_m * bnb * wo * n_j * bco * (3 + (out_bits or 0))
     vpu = w_asm + a_asm + epilogue
 
     return max(hbm / tpu.hbm_bw, macs / tpu.int8_macs) + vpu / tpu.vpu_ops

@@ -37,6 +37,8 @@ __all__ = [
     "calibrate",
     "pack_weights",
     "QuantizedWeight",
+    "pack_conv_weights",
+    "QuantizedConvWeight",
 ]
 
 
@@ -170,6 +172,59 @@ class QuantizedWeight:
     @property
     def out_features(self) -> int:
         return self.packed.shape[-1]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedConvWeight:
+    """Deployment conv weight: bit-transposed packed codes + LSQ scale.
+
+    ``packed``: (w_bits, FH, FW, ceil(Ci/32), Co) uint32 — the input-channel
+    (lane) axis packed, the layout the implicit-GEMM conv kernel's AGU-style
+    tap walk consumes. ``scale``: (Co,) or scalar fp32.
+    """
+
+    packed: jax.Array
+    scale: jax.Array
+    bits: int
+    signed: bool
+    ci: int  # logical input-channel count (lane axis length before padding)
+
+    def tree_flatten(self):
+        return (self.packed, self.scale), (self.bits, self.signed, self.ci)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        bits, signed, ci = aux
+        return cls(children[0], children[1], bits, signed, ci)
+
+    @property
+    def out_channels(self) -> int:
+        return self.packed.shape[-1]
+
+    @property
+    def fh(self) -> int:
+        return self.packed.shape[1]
+
+    @property
+    def fw(self) -> int:
+        return self.packed.shape[2]
+
+
+def pack_conv_weights(w: jax.Array, spec: QuantSpec,
+                      alpha: Optional[jax.Array] = None) -> QuantizedConvWeight:
+    """Quantize + bit-transpose an HWIO conv filter ``(FH, FW, Ci, Co)`` for
+    deployment (per-output-channel scales by default, like the scaler RAM)."""
+    fh, fw, ci, co = w.shape
+    if alpha is None:
+        alpha = (init_alpha(w, spec, axis=(0, 1, 2)) if spec.per_channel
+                 else init_alpha(w, spec))
+    q = quantize_int(w, alpha, spec)                      # (FH, FW, Ci, Co)
+    planes = bitops.to_bitplanes(q, spec.bits)            # (bits, FH, FW, Ci, Co)
+    planes = bitops.pad_to(planes, 32, axis=3)
+    packed = bitops.pack_bitplanes(planes, axis=3)        # (bits, FH, FW, Kw, Co)
+    return QuantizedConvWeight(packed, jnp.squeeze(alpha), spec.bits,
+                               spec.signed, ci)
 
 
 def pack_weights(w: jax.Array, spec: QuantSpec,

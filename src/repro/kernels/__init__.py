@@ -4,6 +4,7 @@
 #
 # Layout:
 #   bitserial_matmul.py — v1 + v2 Pallas TPU kernels (DESIGN.md §2)
+#   bitserial_conv.py   — implicit-GEMM packed conv2d kernel (DESIGN.md §2.6)
 #   quantize_pack.py    — fused quantize→bit-transpose-pack (QuantSer)
 #   tuning.py           — cost-model-driven block-size autotuner
 #   ops.py              — jit'd backend dispatch (xla / ref / pallas / v2)

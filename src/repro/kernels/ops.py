@@ -29,16 +29,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bitops
-from repro.core.bitserial import (SerialSpec, plan_spec, serial_matmul_packed,
+from repro.core.bitserial import (SerialSpec, plan_spec, serial_conv2d_packed_acts,
+                                  serial_matmul_packed,
                                   serial_matmul_packed_acts)
 from repro.core.quant import QuantSpec, QuantizedWeight, quantize_int, qrange
 from repro.kernels import tuning
+from repro.kernels.bitserial_conv import bitserial_conv2d_v2_pallas
 from repro.kernels.bitserial_matmul import (bitserial_matmul_pallas,
                                             bitserial_matmul_v2_pallas)
 from repro.kernels.ref import bitserial_matmul_ref
 
 __all__ = ["serial_matmul_op", "serial_matmul_packed_op", "pack_activations",
-           "quantized_linear"]
+           "serial_conv2d_packed_op", "quantized_linear"]
 
 
 def pack_activations(codes: jax.Array, a_bits: int) -> jax.Array:
@@ -134,6 +136,76 @@ def serial_matmul_packed_op(
     if emit_packed and requant is not None:
         return out.reshape((requant.bits,) + lead + (out.shape[-1],))
     return out.reshape(lead + (out.shape[-1],))
+
+
+def serial_conv2d_packed_op(
+    x_packed: jax.Array,
+    w_packed: jax.Array,
+    scale: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    spec: SerialSpec,
+    ci: int,
+    stride: int = 1,
+    padding: int = 1,
+    relu: bool = False,
+    out_dtype=jnp.float32,
+    requant: Optional[QuantSpec] = None,
+    requant_scale: Optional[jax.Array] = None,
+    emit_packed: bool = False,
+    backend: str = "pallas_v2",
+    interpret: bool = False,
+    block_co: Optional[int] = None,
+    block_nb: Optional[int] = None,
+) -> jax.Array:
+    """Fused implicit-GEMM serial conv2d over **bit-packed activations**.
+
+    ``x_packed``: (a_bits, N, H, W, ceil(Ci/32)) uint32 (channel axis
+    packed — what :func:`pack_activations` / a previous layer's fused
+    epilogue emits); ``w_packed``: (w_bits, FH, FW, ceil(Ci/32), Co). With
+    ``requant`` + ``emit_packed`` the output is (requant.bits, N, Ho, Wo,
+    ceil(Co/32)) uint32 — directly consumable by the next conv layer, so
+    ResNet stages chain packed end-to-end.
+
+    ``backend="pallas_v2"`` is the Pallas kernel (block sizes from the conv
+    cost-model autotuner unless given); ``backend="xla"`` lowers the same
+    tap-walk dataflow with XLA (the oracle — also the fast CPU path).
+    """
+    if emit_packed and requant is None:
+        raise ValueError("emit_packed requires requant")
+    ba, n, h, w_in, _ = x_packed.shape
+    bw, fh, fw, _, co = w_packed.shape
+
+    if backend == "pallas_v2":
+        if block_co is not None and block_nb is not None:
+            tile_kwargs = dict(block_co=block_co, block_nb=block_nb)
+        else:
+            # pinned axes constrain the tuner; the rest (other axis + cache
+            # flags) is still tuned and VMEM-validated jointly
+            tc = tuning.choose_conv_tile(
+                n, h, w_in, ci, co, fh=fh, fw=fw, stride=stride,
+                padding=padding, spec=spec,
+                out_bits=requant.bits if (requant and emit_packed) else None,
+                fix_bco=block_co, fix_bnb=block_nb)
+            tile_kwargs = tc.kernel_kwargs()
+        return bitserial_conv2d_v2_pallas(
+            x_packed, w_packed, scale, bias, spec=spec, ci=ci, stride=stride,
+            padding=padding, relu=relu, out_dtype=out_dtype, requant=requant,
+            requant_scale=requant_scale, emit_packed=emit_packed,
+            interpret=interpret, **tile_kwargs)
+    if backend == "xla":
+        acc = serial_conv2d_packed_acts(
+            x_packed, w_packed, spec=spec, ci=ci, stride=stride,
+            padding=padding)
+        nn, ho, wo, _ = acc.shape
+        out = _epilogue_xla(acc.reshape(nn * ho * wo, co), scale, bias,
+                            relu=relu, out_dtype=out_dtype, requant=requant,
+                            requant_scale=requant_scale,
+                            emit_packed=emit_packed)
+        if emit_packed:
+            return out.reshape((requant.bits, nn, ho, wo, out.shape[-1]))
+        return out.reshape((nn, ho, wo, out.shape[-1]))
+    raise ValueError(f"unknown packed-conv backend {backend!r}")
 
 
 def serial_matmul_op(

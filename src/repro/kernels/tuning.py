@@ -22,9 +22,12 @@ from typing import Optional, Tuple
 
 from repro.core import bitops
 from repro.core.bitserial import SerialSpec
-from repro.core.cost_model import TPUConfig, kernel_cost, kernel_vmem_bytes
+from repro.core.cost_model import (TPUConfig, conv_kernel_cost,
+                                   conv_kernel_vmem_bytes, kernel_cost,
+                                   kernel_vmem_bytes)
 
-__all__ = ["TileConfig", "choose_tile", "clear_cache", "cache_info"]
+__all__ = ["TileConfig", "choose_tile", "ConvTileConfig", "choose_conv_tile",
+           "clear_cache", "cache_info"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +113,84 @@ def choose_tile(m: int, k: int, n: int, spec: SerialSpec, *,
         best = TileConfig(_BM_CANDIDATES[0], _BN_CANDIDATES[0],
                           _BK_CANDIDATES[0], False, False, float("inf"),
                           0)
+    _cache[key] = best
+    return best
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvTileConfig:
+    """One tuned implicit-GEMM conv configuration (kwargs for the Pallas
+    call): Co-block width, images per grid step, cache flags."""
+
+    block_co: int
+    block_nb: int
+    cache_weights: bool
+    cache_acts: bool
+    cost: float = 0.0          # modeled seconds/call (diagnostic)
+    vmem_bytes: int = 0        # modeled VMEM working set (diagnostic)
+
+    def kernel_kwargs(self) -> dict:
+        return dict(block_co=self.block_co, block_nb=self.block_nb,
+                    cache_weights=self.cache_weights,
+                    cache_acts=self.cache_acts)
+
+
+_BCO_CANDIDATES = (32, 64, 128, 256, 512)    # %32: packed-output word axis
+_BNB_CANDIDATES = (1, 2, 4, 8)               # images per grid step
+
+
+def choose_conv_tile(n: int, h: int, w: int, ci: int, co: int, *,
+                     fh: int, fw: int, stride: int, padding: int,
+                     spec: SerialSpec, out_bits: Optional[int] = None,
+                     fix_bco: Optional[int] = None,
+                     fix_bnb: Optional[int] = None,
+                     tpu: TPUConfig = TPUConfig()) -> ConvTileConfig:
+    """Pick (block_co, block_nb, cache flags) for one conv shape.
+
+    The spatial/M blocking is fixed by the kernel's AGU walk (one output
+    row × ``block_nb`` images per grid step; K-blocking = the FH grid axis
+    + in-kernel FW walk), so the tuner's degrees of freedom are the
+    Co-block width, the image grouping, and whether the digit-plane caches
+    fit VMEM. ``fix_bco``/``fix_bnb`` pin one axis (caller override) while
+    the rest is still tuned and VMEM-validated jointly. Memoized per
+    (shape, spec, out_bits, pins, tpu).
+    """
+    key = ("conv", n, h, w, ci, co, fh, fw, stride, padding, spec, out_bits,
+           fix_bco, fix_bnb, tpu)
+    hit = _cache.get(key)
+    if hit is not None:
+        return hit
+
+    nd_a = bitops.num_digits(spec.a_bits, spec.radix_bits, spec.a_signed)
+    nd_w = bitops.num_digits(spec.w_bits, spec.radix_bits, spec.w_signed)
+    budget = int(tpu.vmem_bytes * tpu.vmem_budget_frac)
+
+    bco_opts = ([fix_bco] if fix_bco is not None
+                else _candidates(co, _BCO_CANDIDATES, 32))
+    bnb_opts = ([fix_bnb] if fix_bnb is not None
+                else [b for b in _BNB_CANDIDATES if b <= max(1, n)])
+    best: Optional[ConvTileConfig] = None
+    for bco in bco_opts:
+        for bnb in bnb_opts:
+            for cw, ca in ((True, True), (True, False),
+                           (False, True), (False, False)):
+                kw = dict(fh=fh, fw=fw, stride=stride, padding=padding,
+                          a_bits=spec.a_bits, w_bits=spec.w_bits,
+                          nd_a=nd_a, nd_w=nd_w, bnb=bnb, bco=bco,
+                          cache_weights=cw, cache_acts=ca,
+                          out_bits=out_bits)
+                vmem = conv_kernel_vmem_bytes(n, h, w, ci, co, **kw)
+                if vmem > budget:
+                    continue
+                cost = conv_kernel_cost(n, h, w, ci, co, **kw, tpu=tpu)
+                cand = ConvTileConfig(bco, bnb, cw, ca, cost, vmem)
+                if best is None or cost < best.cost or (
+                        cost == best.cost
+                        and bco * bnb > best.block_co * best.block_nb):
+                    best = cand
+    if best is None:  # degenerate: nothing fit the budget — smallest tile
+        best = ConvTileConfig(fix_bco or _BCO_CANDIDATES[0], fix_bnb or 1,
+                              False, False, float("inf"), 0)
     _cache[key] = best
     return best
 

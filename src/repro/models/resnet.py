@@ -4,9 +4,22 @@ end-to-end through the quantized serial pipeline.
 This is the model of paper Tables 2/3: residual-distilled ("Plain-CNN", no
 shortcuts), first and last layers kept full precision on the host, all hidden
 convs quantized (default 2-bit weights / 2-bit activations as in Table 3).
-The forward pass uses :func:`repro.core.bitserial.serial_conv2d` — i.e. the
-actual bit-serial arithmetic, not fake quantization — matching what the MVU
-array executes, and is also runnable via the command-stream controller.
+
+Two inference paths share one set of float params:
+
+* :func:`resnet9_forward` — the reference quantized path through
+  :func:`repro.core.bitserial.serial_conv2d` (real bit-serial arithmetic,
+  runnable via the command-stream controller). Weight quantization is
+  hoisted into :func:`resnet9_quantize_weights` so a serving loop computes
+  the codes once instead of re-quantizing every tensor per call.
+* :func:`resnet9_pack` + :func:`resnet9_forward_packed` — the deployment
+  path: one-time calibration + bit-transposed packing (the code
+  generator's weight pre-processing), then conv1–conv8 run end-to-end on
+  the implicit-GEMM packed conv kernel with the fused
+  requant→bit-transpose-pack epilogue, so consecutive stages chain in the
+  packed activation format with no host-format hops (pool stages hop only
+  through *integer codes* — max-pooling commutes with the monotone
+  quantizer, so the result is unchanged).
 """
 
 from __future__ import annotations
@@ -18,12 +31,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bitserial import SerialSpec, serial_conv2d
+from repro.core.bitserial import SerialSpec, plan_spec, serial_conv2d
 from repro.core.pipeline_modules import maxpool_relu, relu
-from repro.core.quant import QuantSpec, calibrate, init_alpha, quantize_int
+from repro.core.quant import (QuantSpec, calibrate, init_alpha,
+                              pack_conv_weights, quantize_int)
+from repro.kernels.ops import pack_activations, serial_conv2d_packed_op
 
-__all__ = ["ResNet9Config", "resnet9_init", "resnet9_forward",
-           "resnet9_forward_float"]
+__all__ = ["ResNet9Config", "resnet9_init", "resnet9_quantize_weights",
+           "resnet9_forward", "resnet9_forward_float", "resnet9_pack",
+           "resnet9_forward_packed"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,7 +70,8 @@ def resnet9_init(key, cfg: ResNet9Config = ResNet9Config()) -> Dict:
             "scale": jnp.ones((co,), jnp.float32),
             "bias": jnp.zeros((co,), jnp.float32),
         }
-    p["fc"] = {"w": jax.random.normal(ks[11], (512, cfg.num_classes)) * 0.05}
+    p["fc"] = {"w": jax.random.normal(
+        ks[11], (cfg.layers[-1][2], cfg.num_classes)) * 0.05}
     return p
 
 
@@ -64,22 +81,51 @@ def _quantize_acts(x, bits):
     return quantize_int(x, alpha, spec), alpha
 
 
-def resnet9_forward(params: Dict, images: jax.Array,
-                    cfg: ResNet9Config = ResNet9Config()) -> jax.Array:
-    """Quantized inference path: conv0 (host, float) → 8 serial-conv stages
-    (integer) → global pool → fc (host, float). images: (N,32,32,3)."""
-    spec = SerialSpec(cfg.a_bits, cfg.w_bits, True, True, cfg.radix_bits)
-    wspec = QuantSpec(cfg.w_bits, True, per_channel=True)
-    # first layer on host in float (paper §4.1)
+def _conv0(params: Dict, images: jax.Array) -> jax.Array:
+    """First layer on host in float (paper §4.1)."""
     x = jax.lax.conv_general_dilated(
         images, params["conv0"]["w"].astype(images.dtype), (1, 1),
         [(1, 1), (1, 1)], dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    x = relu(x)
+    return relu(x)
+
+
+def resnet9_quantize_weights(params: Dict,
+                             cfg: ResNet9Config = ResNet9Config()) -> Dict:
+    """One-time weight calibration + quantization for the serial path.
+
+    Returns ``{layer: {"wq": int codes (FH,FW,Ci,Co), "alpha_w":
+    (1,1,1,Co)}}`` — computed once at deployment instead of inside every
+    forward call (the seed re-quantized all 8 conv tensors per inference).
+    """
+    wspec = QuantSpec(cfg.w_bits, True, per_channel=True)
+    out = {}
     for name, ci, co, stride, pool in cfg.layers:
         w = params[name]["w"]
         aw = init_alpha(w, wspec, axis=(0, 1, 2))
-        wq = quantize_int(w, aw, wspec)
+        out[name] = {"wq": quantize_int(w, aw, wspec), "alpha_w": aw}
+    return out
+
+
+def resnet9_forward(params: Dict, images: jax.Array,
+                    cfg: ResNet9Config = ResNet9Config(), *,
+                    qweights: Optional[Dict] = None,
+                    _record_act_alphas: Optional[Dict] = None) -> jax.Array:
+    """Quantized inference path: conv0 (host, float) → 8 serial-conv stages
+    (integer) → global pool → fc (host, float). images: (N,32,32,3).
+
+    Pass ``qweights=resnet9_quantize_weights(params, cfg)`` to skip the
+    per-call weight re-quantization (hoisted deployment form); omitted, it
+    is computed inline (seed-compatible behaviour).
+    """
+    spec = SerialSpec(cfg.a_bits, cfg.w_bits, True, True, cfg.radix_bits)
+    if qweights is None:
+        qweights = resnet9_quantize_weights(params, cfg)
+    x = _conv0(params, images)
+    for name, ci, co, stride, pool in cfg.layers:
+        wq, aw = qweights[name]["wq"], qweights[name]["alpha_w"]
         xq, ax = _quantize_acts(x, cfg.a_bits)
+        if _record_act_alphas is not None:
+            _record_act_alphas[name] = ax
         acc = serial_conv2d(xq, wq, spec, stride=stride, padding=1)
         # scaler + bias pipeline modules (dequant fused into the scale)
         x = (acc.astype(jnp.float32)
@@ -91,6 +137,94 @@ def resnet9_forward(params: Dict, images: jax.Array,
             x = relu(x)
     x = jnp.mean(x, axis=(1, 2))  # global average pool
     return x @ params["fc"]["w"]  # last layer on host
+
+
+# --------------------------------------------------------------------------
+# Packed deployment path — implicit-GEMM conv kernel, layers chain packed
+# --------------------------------------------------------------------------
+
+def resnet9_pack(params: Dict, calib_images: jax.Array,
+                 cfg: ResNet9Config = ResNet9Config()) -> Dict:
+    """One-time deployment packing (the conv analogue of ``pack_qdense``).
+
+    Replays the quantized forward on ``calib_images`` to calibrate each
+    stage's activation step size, then exports every hidden conv as
+    bit-transposed packed planes ``(w_bits, 3, 3, ceil(Ci/32), Co)`` with
+    the dequant scaler folded per output channel. The result is a pytree
+    consumable by :func:`resnet9_forward_packed` (jit-friendly).
+    """
+    qweights = resnet9_quantize_weights(params, cfg)
+    act_alphas: Dict = {}
+    resnet9_forward(params, calib_images, cfg, qweights=qweights,
+                    _record_act_alphas=act_alphas)
+    wspec = QuantSpec(cfg.w_bits, True, per_channel=True)
+    packed: Dict = {"conv0": {"w": params["conv0"]["w"]},
+                    "fc": {"w": params["fc"]["w"]}, "layers": {}}
+    for name, ci, co, stride, pool in cfg.layers:
+        # the single weight-alpha derivation site: resnet9_quantize_weights
+        aw = qweights[name]["alpha_w"]
+        qw = pack_conv_weights(params[name]["w"], wspec, aw)
+        ax = act_alphas[name]
+        packed["layers"][name] = {
+            "w_packed": qw.packed,
+            # scaler RAM contents: act step x weight step x BN scale
+            "scale": (ax * aw.reshape(1, 1, 1, co)
+                      * params[name]["scale"]).reshape(co),
+            "bias": params[name]["bias"],
+            "act_alpha": ax,
+        }
+    return packed
+
+
+def resnet9_forward_packed(packed: Dict, images: jax.Array,
+                           cfg: ResNet9Config = ResNet9Config(), *,
+                           backend: str = "pallas_v2",
+                           interpret: bool = False) -> jax.Array:
+    """Deployment forward: conv1–conv8 end-to-end on the implicit-GEMM
+    packed conv kernel. images: (N,32,32,3).
+
+    Activations stay bit-packed between stages (the fused
+    requant→bit-transpose-pack epilogue feeds the next stage directly);
+    MaxPool stages emit integer codes instead, pool on the codes —
+    bit-identical, since max commutes with the monotone quantizer — and
+    repack. Matches :func:`resnet9_forward` given the same calibration
+    batch statistics.
+    """
+    spec = plan_spec(SerialSpec(cfg.a_bits, cfg.w_bits, True, True,
+                                cfg.radix_bits))
+    aspec = QuantSpec(cfg.a_bits, True)
+    layers = cfg.layers
+    x = _conv0(packed, images)
+    codes = quantize_int(x, packed["layers"][layers[0][0]]["act_alpha"],
+                         aspec)
+    xp = pack_activations(codes, cfg.a_bits)
+    for i, (name, ci, co, stride, pool) in enumerate(layers):
+        lp = packed["layers"][name]
+        last = i == len(layers) - 1
+        nxt = None if last else packed["layers"][layers[i + 1][0]]
+        common = dict(spec=spec, ci=ci, stride=stride, padding=1,
+                      backend=backend, interpret=interpret)
+        if last:
+            x = serial_conv2d_packed_op(
+                xp, lp["w_packed"], lp["scale"], lp["bias"], relu=True,
+                **common)
+            if pool:
+                x = maxpool_relu(x, window=2, with_relu=True)
+        elif pool:
+            # requant to integer codes, pool the codes, repack
+            codes = serial_conv2d_packed_op(
+                xp, lp["w_packed"], lp["scale"], lp["bias"], relu=True,
+                requant=aspec, requant_scale=nxt["act_alpha"], **common)
+            pooled = maxpool_relu(codes.astype(jnp.int32), window=2,
+                                  with_relu=True)
+            xp = pack_activations(pooled, cfg.a_bits)
+        else:
+            xp = serial_conv2d_packed_op(
+                xp, lp["w_packed"], lp["scale"], lp["bias"], relu=True,
+                requant=aspec, requant_scale=nxt["act_alpha"],
+                emit_packed=True, **common)
+    x = jnp.mean(x, axis=(1, 2))  # global average pool
+    return x @ packed["fc"]["w"]  # last layer on host
 
 
 def resnet9_forward_float(params: Dict, images: jax.Array,
