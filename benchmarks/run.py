@@ -2,10 +2,14 @@
 roofline summary. Prints ``name,us_per_call,derived`` CSV rows and writes a
 machine-readable ``BENCH_kernels.json`` (name → us_per_call + derived) so
 the perf trajectory is tracked PR-over-PR. Conv-kernel + ResNet9
-end-to-end rows are additionally dumped to ``BENCH_conv.json``.
+end-to-end rows are additionally dumped to ``BENCH_conv.json``; the graph-
+compiler rows (compiled vs hand-written packed path, executor dispatch
+overhead) to ``BENCH_compile.json``.
 
-Run: PYTHONPATH=src python -m benchmarks.run [--only kernels,tables,conv]
+Run: PYTHONPATH=src python -m benchmarks.run
+     [--only kernels,tables,conv,compile]
      [--json BENCH_kernels.json] [--conv-json BENCH_conv.json]
+     [--compile-json BENCH_compile.json]
 """
 
 from __future__ import annotations
@@ -19,14 +23,18 @@ import numpy as np
 
 _ROWS: dict = {}
 _CONV_KEYS: list = []
+_COMPILE_KEYS: list = []
 
 
-def _emit(name: str, us: float, derived: str = "", conv: bool = False) -> None:
+def _emit(name: str, us: float, derived: str = "", conv: bool = False,
+          comp: bool = False) -> None:
     """One result row: CSV to stdout + recorded for the JSON dump(s)."""
     print(f"{name},{us:.0f},{derived}")
     _ROWS[name] = {"us_per_call": round(float(us), 1), "derived": derived}
     if conv:
         _CONV_KEYS.append(name)
+    if comp:
+        _COMPILE_KEYS.append(name)
 
 
 def _time_us(fn, n=5, warmup=1, repeat=3):
@@ -402,6 +410,90 @@ def bench_resnet9_e2e():
           f"{us_seed / us_packed:.2f}x vs seed", conv=True)
 
 
+def bench_compile_resnet9():
+    """Graph-compiler ResNet9 vs the hand-written packed path: same calib
+    batch, same XLA packed-kernel lowering — the compiled Program must sit
+    within 5% of `resnet9_forward_packed` (acceptance: the compiler
+    generalizes the PR1/PR2 wins without taxing the hand-tuned path)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.codegen import generate
+    from repro.models.resnet import (ResNet9Config, resnet9_compile,
+                                     resnet9_cost_layers,
+                                     resnet9_forward_packed, resnet9_init,
+                                     resnet9_pack)
+    cfg = ResNet9Config()
+    params = resnet9_init(jax.random.PRNGKey(0), cfg)
+    images = jnp.asarray(np.random.RandomState(0).rand(4, 32, 32, 3),
+                         jnp.float32)
+    t0 = time.time()
+    prog = resnet9_compile(params, images, cfg, backend="xla")
+    prog(images).block_until_ready()  # include first jit in compile cost
+    us_compile = (time.time() - t0) * 1e6
+    packed = resnet9_pack(params, images, cfg)
+    f_hand = jax.jit(lambda p, im: resnet9_forward_packed(
+        p, im, cfg, backend="xla"))
+    # deterministic same-computation evidence first: XLA cost analysis of
+    # both jitted programs (CPU wall-clock on shared CI is noisy)
+    def _cost(f, *a):
+        c = f.lower(*a).compile().cost_analysis()
+        c = c[0] if isinstance(c, list) else c
+        return (c or {}).get("flops"), (c or {}).get("bytes accessed")
+    from repro.compiler import executor as _pex
+    f_comp = jax.jit(_pex.make_runner(prog))
+    cost_hand = _cost(f_hand, packed, images)
+    cost_comp = _cost(f_comp, prog.params, images)
+    us_hand, us_comp = _time_interleaved_us([
+        lambda: jax.block_until_ready(f_hand(packed, images)),
+        lambda: jax.block_until_ready(prog(images)),
+    ], n=2, rounds=8)
+    exact = bool(jnp.all(prog(images) == f_hand(packed, images)))
+    ratio = us_comp / us_hand
+    _emit("bench_compile_resnet9_hand_packed", us_hand,
+          "resnet9_forward_packed, XLA, batch 4", comp=True)
+    _emit("bench_compile_resnet9_compiled", us_comp,
+          f"graph-compiler Program; {ratio:.3f}x hand time "
+          f"(within 5%: {ratio <= 1.05}); bit_exact={exact}", comp=True)
+    _emit("bench_compile_resnet9_hlo_cost", 0,
+          f"flops/bytes hand={cost_hand} compiled={cost_comp} "
+          f"(identical: {cost_hand == cost_comp})", comp=True)
+    _emit("bench_compile_resnet9_compile_time", us_compile,
+          "one-time: passes+calibration+packing+tuning+first jit", comp=True)
+    hand_cs = generate(resnet9_cost_layers(cfg), a_bits=cfg.a_bits,
+                       w_bits=cfg.w_bits)
+    comp_cs = prog.to_command_stream()
+    _emit("bench_compile_resnet9_cycles", 0,
+          f"per-MVU {comp_cs.per_mvu_cycles} "
+          f"(matches hand codegen: "
+          f"{comp_cs.per_mvu_cycles == hand_cs.per_mvu_cycles})", comp=True)
+
+
+def bench_compile_dispatch():
+    """Executor dispatch overhead: a trivial one-gemm Program, jitted call
+    (the serving path — whole step list fused into one XLA computation)
+    vs eager step-walk (`Program.run`)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.compiler import Graph, Node, compile_graph
+    from repro.models.layers import QuantPolicy
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.rand(8, 256), jnp.float32)
+    g = Graph("one_gemm", {"x": (None, 256)}, ["y"],
+              [Node("fc", "gemm", ["x", "w"], "fy"),
+               Node("r", "relu", ["fy"], "y")],
+              {"w": (rng.randn(256, 256) * 0.1).astype(np.float32)})
+    prog = compile_graph(g, x, policy=QuantPolicy(
+        mode="serial", w_bits=4, a_bits=8, radix_bits=7), backend="xla")
+    prog(x)  # compile
+    us_jit = _time_us(lambda: jax.block_until_ready(prog(x)), n=20)
+    us_eager = _time_us(lambda: jax.block_until_ready(prog.run(x)), n=5)
+    _emit("bench_compile_dispatch_jit", us_jit,
+          "jitted Program call (serving path)", comp=True)
+    _emit("bench_compile_dispatch_eager", us_eager,
+          f"eager step walk; jit removes {us_eager - us_jit:.0f}us/call "
+          "of dispatch", comp=True)
+
+
 def bench_quantized_lm_serve():
     """Tokens/s of the smoke LM through the full quantized serve path."""
     from repro.configs import get_arch
@@ -449,6 +541,7 @@ GROUPS = {
                table6_resnet50],
     "kernels": [bench_serial_matmul, bench_pallas_kernel, bench_tuner],
     "conv": [bench_conv_layers, bench_conv_pallas_kernel, bench_resnet9_e2e],
+    "compile": [bench_compile_resnet9, bench_compile_dispatch],
     "serve": [bench_quantized_lm_serve],
     "roofline": [roofline_summary],
 }
@@ -464,6 +557,9 @@ def main(argv=None) -> None:
                          "('' disables)")
     ap.add_argument("--conv-json", default="BENCH_conv.json",
                     help="path for the conv/ResNet9 rows dump "
+                         "('' disables)")
+    ap.add_argument("--compile-json", default="BENCH_compile.json",
+                    help="path for the graph-compiler rows dump "
                          "('' disables)")
     args = ap.parse_args(argv)
     groups = list(GROUPS) if not args.only else [
@@ -485,6 +581,11 @@ def main(argv=None) -> None:
         with open(args.conv_json, "w") as f:
             json.dump(conv_rows, f, indent=1, sort_keys=True)
         print(f"# wrote {len(conv_rows)} rows to {args.conv_json}")
+    if args.compile_json and _COMPILE_KEYS:
+        comp_rows = {k: _ROWS[k] for k in _COMPILE_KEYS}
+        with open(args.compile_json, "w") as f:
+            json.dump(comp_rows, f, indent=1, sort_keys=True)
+        print(f"# wrote {len(comp_rows)} rows to {args.compile_json}")
 
 
 if __name__ == "__main__":

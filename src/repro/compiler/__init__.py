@@ -1,0 +1,31 @@
+"""Graph compiler: model format → packed-kernel Program (paper §3.3).
+
+The deployment flow the paper describes — "ingests CNN models in ONNX
+format and generates an executable command stream" — as a real subsystem:
+
+* :mod:`repro.compiler.ir` — typed graph IR + the native dict/JSON format,
+* :mod:`repro.compiler.onnx_import` — ONNX-subset importer (optional dep),
+* :mod:`repro.compiler.passes` — shape inference, constant folding,
+  epilogue fusion, precision annotation, dead-node elimination,
+* :mod:`repro.compiler.lower` — calibration + AOT weight packing + tile
+  autotuning → executable :class:`Program` (+ CommandStream linkage),
+* :mod:`repro.compiler.executor` — single-jit Program execution.
+"""
+
+from repro.compiler.ir import (Graph, GraphError, Node, UnsupportedOpError,
+                               graph_from_dict, graph_from_json,
+                               graph_to_dict, graph_to_json)
+from repro.compiler.lower import Program, Step, compile_graph
+from repro.compiler.onnx_import import HAS_ONNX, import_onnx
+from repro.compiler.passes import (annotate_precision, eliminate_dead,
+                                   fold_constants, fuse_epilogues,
+                                   infer_shapes, run_pipeline)
+
+__all__ = [
+    "Graph", "Node", "GraphError", "UnsupportedOpError",
+    "graph_from_dict", "graph_to_dict", "graph_from_json", "graph_to_json",
+    "Program", "Step", "compile_graph",
+    "HAS_ONNX", "import_onnx",
+    "infer_shapes", "fold_constants", "fuse_epilogues",
+    "annotate_precision", "eliminate_dead", "run_pipeline",
+]

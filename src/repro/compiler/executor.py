@@ -1,0 +1,143 @@
+"""Program executor: jit-runs a lowered :class:`~repro.compiler.lower.Program`
+on batched inputs.
+
+Each step kind maps to one dispatch function; the whole step list closes
+over a single traced function (:func:`make_runner`) so ``jax.jit`` fuses the
+entire compiled model into one XLA computation — the executor adds zero
+per-step runtime dispatch beyond the Python walk at trace time (measured by
+the ``compile`` benchmark group's dispatch-overhead row).
+
+The packed kernel calls go through :mod:`repro.kernels.ops`, so the same
+Program retargets between the XLA oracle lowering (CPU / dry-run) and the
+Pallas v2 kernels (TPU) via ``backend=`` without re-lowering; the tile
+choices baked in at compile time are forwarded to the Pallas dispatch.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pipeline_modules import maxpool_relu
+from repro.core.quant import QuantSpec, quantize_int
+from repro.kernels.ops import (pack_activations, serial_conv2d_packed_op,
+                               serial_matmul_packed_op)
+
+__all__ = ["make_runner"]
+
+
+def _requant_spec(attrs) -> Optional[QuantSpec]:
+    if attrs.get("out") in ("packed", "codes", "requant_codes"):
+        return QuantSpec(attrs["requant_bits"], attrs["requant_signed"])
+    return None
+
+
+def _conv_packed(st, p, x, backend, interpret):
+    return serial_conv2d_packed_op(
+        x, p["w_packed"], p["scale"], p.get("bias"),
+        spec=st.attrs["spec"], ci=st.attrs["ci"], stride=st.attrs["stride"],
+        padding=st.attrs["padding"], relu=st.attrs["relu"],
+        requant=_requant_spec(st.attrs),
+        requant_scale=p.get("requant_scale"),
+        emit_packed=st.attrs["out"] == "packed",
+        backend=backend, interpret=interpret, **st.attrs["tile"])
+
+
+def _gemm_packed(st, p, x, backend, interpret):
+    return serial_matmul_packed_op(
+        x, p["w_packed"], p["scale"], p.get("bias"),
+        spec=st.attrs["spec"], k=st.attrs["k"], relu=st.attrs["relu"],
+        requant=_requant_spec(st.attrs),
+        requant_scale=p.get("requant_scale"),
+        emit_packed=st.attrs["out"] == "packed",
+        backend=backend, interpret=interpret, **st.attrs["tile"])
+
+
+def _host_conv(st, p, x, backend, interpret):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype),
+        (st.attrs["stride"], st.attrs["stride"]),
+        [(st.attrs["padding"], st.attrs["padding"])] * 2,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if "scale" in p:
+        y = y * p["scale"]
+    if "bias" in p:
+        y = y + p["bias"]
+    return jnp.maximum(y, 0) if st.attrs["relu"] else y
+
+
+def _host_gemm(st, p, x, backend, interpret):
+    y = x @ p["w"].astype(x.dtype)
+    if "scale" in p:
+        y = y * p["scale"]
+    if "bias" in p:
+        y = y + p["bias"]
+    return jnp.maximum(y, 0) if st.attrs["relu"] else y
+
+
+def _quantize_pack(st, p, x, backend, interpret):
+    codes = quantize_int(x, p["act_alpha"],
+                         QuantSpec(st.attrs["bits"], st.attrs["signed"]))
+    return pack_activations(codes, st.attrs["bits"])
+
+
+def _maxpool(st, p, x, backend, interpret):
+    # integer codes pool as int32 (max commutes with the monotone
+    # quantizer, so pooling codes == pooling floats then quantizing)
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        x = x.astype(jnp.int32)
+    return maxpool_relu(x, st.attrs["window"], st.attrs["stride"],
+                        with_relu=False)
+
+
+_APPLY: Dict[str, Callable] = {
+    "conv_packed": _conv_packed,
+    "gemm_packed": _gemm_packed,
+    "host_conv": _host_conv,
+    "host_gemm": _host_gemm,
+    "quantize_pack": _quantize_pack,
+    "pack_codes": lambda st, p, x, b, i: pack_activations(
+        x.astype(jnp.int32), st.attrs["bits"]),
+    "maxpool": _maxpool,
+    "global_pool": lambda st, p, x, b, i: jnp.mean(x, axis=(1, 2)),
+    "flatten": lambda st, p, x, b, i: x.reshape(x.shape[0], -1),
+    "relu": lambda st, p, x, b, i: jnp.maximum(x, 0),
+    "add": lambda st, p, a, b_, *rest: a + b_,
+    "dequant": lambda st, p, x, b, i: x.astype(jnp.float32) * p["alpha"],
+    "fake_quant": lambda st, p, x, b, i: quantize_int(
+        x, p["scale"], QuantSpec(st.attrs["bits"], st.attrs["signed"])
+    ).astype(jnp.float32) * p["scale"],
+}
+
+
+def make_runner(program, *, backend: Optional[str] = None,
+                interpret: Optional[bool] = None) -> Callable:
+    """Build ``run(params, x) -> output`` for one Program.
+
+    The step list and attrs are static (closed over); ``params`` is the
+    traced pytree, so ``jax.jit(make_runner(p))`` compiles once per
+    (backend, batch shape) and weight updates never retrigger tracing.
+    """
+    backend = backend or program.backend
+    interpret = program.interpret if interpret is None else interpret
+    steps = program.steps
+    input_name, output_name = program.input_name, program.output_name
+
+    def run(params, x):
+        env = {input_name: x}
+        for st in steps:
+            fn = _APPLY.get(st.kind)
+            if fn is None:
+                raise KeyError(f"no executor for step kind {st.kind!r}")
+            args = [env[i] for i in st.inputs]
+            if st.kind == "add":
+                env[st.output] = fn(st, params.get(st.name, {}), *args,
+                                    backend, interpret)
+            else:
+                env[st.output] = fn(st, params.get(st.name, {}), args[0],
+                                    backend, interpret)
+        return env[output_name]
+
+    return run

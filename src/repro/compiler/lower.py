@@ -1,0 +1,598 @@
+"""Lowering: annotated IR graph → executable :class:`Program` of packed
+kernel calls (the back half of the paper's §3.3 code generator).
+
+``compile_graph`` does, per serial compute node:
+
+1. **calibration** — replay the graph once on a calibration batch through
+   the exact-integer reference ops (:func:`repro.core.bitserial.serial_conv2d`
+   / ``serial_matmul``), recording every layer's activation step size — the
+   generalization of ``models/resnet.resnet9_pack``'s replay to arbitrary
+   graphs;
+2. **AOT weight packing** — ``quant.pack_conv_weights`` / ``pack_weights``
+   export bit-transposed planes, with the dequant scaler folded per output
+   channel (activation step × weight step × BN scale: the scaler RAM image);
+3. **tile autotuning** — ``kernels/tuning.choose_conv_tile``/``choose_tile``
+   run once per node at compile time; the chosen blocks are baked into the
+   step so serving never re-enumerates;
+4. **format planning** — each node's output format (packed planes / integer
+   codes / float) is chosen from its consumers so consecutive serial stages
+   chain bit-packed with no host-format hops: conv→conv emits packed
+   directly, conv→maxpool→conv emits codes (max commutes with the monotone
+   quantizer, so pooling codes is bit-exact), anything else emits float.
+
+The resulting :class:`Program` is a static step list + a params pytree —
+jit-compiled as one XLA computation by :mod:`repro.compiler.executor`, and
+lowered to a :class:`repro.core.codegen.CommandStream` via
+:meth:`Program.to_command_stream` so cycle estimates and the runtime
+controller work for any imported model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compiler import passes
+from repro.compiler.ir import Graph, GraphError, Node
+from repro.core import codegen
+from repro.core.bitserial import (SerialSpec, plan_spec, serial_conv2d,
+                                  serial_matmul)
+from repro.core.pipeline_modules import maxpool_relu
+from repro.core.quant import (QuantSpec, init_alpha, pack_conv_weights,
+                              pack_weights, quantize_int)
+from repro.kernels import tuning
+from repro.models.layers import QuantPolicy
+
+__all__ = ["Step", "Program", "compile_graph", "LoweredConv", "LoweredGemm"]
+
+_SERIAL_OPS = ("fused_conv2d", "fused_gemm")
+
+
+@dataclasses.dataclass(frozen=True)
+class Step:
+    """One executor step: static metadata only — bound tensors live in
+    ``Program.params[name]`` so the step list can close over a jit."""
+
+    name: str                  # params key
+    kind: str                  # dispatch key (executor._APPLY)
+    inputs: Tuple[str, ...]
+    output: str
+    attrs: Dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredConv:
+    """Codegen view of a lowered conv node — duck-typed by
+    :func:`repro.core.codegen.generate` (the fused conv+relu+requant
+    epilogue maps onto one CONV2D job with the pipeline modules enabled)."""
+
+    name: str
+    c_in: int
+    c_out: int
+    h: int
+    w: int
+    fh: int = 3
+    fw: int = 3
+    stride: int = 1
+    padding: int = 1
+    relu: bool = False
+    requant: bool = False
+    on_host: bool = False
+    kind: str = "conv2d"
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredGemm:
+    """Codegen view of a lowered gemm node (GEMV job)."""
+
+    name: str
+    k: int
+    n: int
+    relu: bool = False
+    requant: bool = False
+    on_host: bool = False
+    kind: str = "gemm"
+
+
+@dataclasses.dataclass
+class Program:
+    """The executable artifact: static step list + bound params pytree.
+
+    ``params`` maps step name → dict of arrays (packed weight planes,
+    folded scales, biases, activation step sizes); it is the only traced
+    input besides the batch, so re-running with updated weights needs no
+    recompile. ``cost_nodes``/``per_layer_bits`` are the CommandStream
+    linkage consumed by :func:`repro.core.codegen.generate`.
+    """
+
+    graph_name: str
+    steps: Tuple[Step, ...]
+    params: Dict[str, Dict]
+    input_name: str
+    output_name: str
+    backend: str = "xla"
+    interpret: bool = False
+    cost_nodes: List = dataclasses.field(default_factory=list)
+    per_layer_bits: Dict[str, Tuple[int, int]] = dataclasses.field(
+        default_factory=dict)
+    meta: Dict = dataclasses.field(default_factory=dict)
+    _jit_cache: Dict = dataclasses.field(default_factory=dict, repr=False)
+
+    def __call__(self, x, *, backend: Optional[str] = None,
+                 interpret: Optional[bool] = None):
+        """Jit-run the program on a batch (compile cached per backend)."""
+        from repro.compiler import executor
+        backend = backend or self.backend
+        interpret = self.interpret if interpret is None else interpret
+        key = (backend, interpret)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            fn = jax.jit(executor.make_runner(self, backend=backend,
+                                              interpret=interpret))
+            self._jit_cache[key] = fn
+        return fn(self.params, x)
+
+    def run(self, x, **kw):
+        """Eager (un-jitted) execution — for debugging / dispatch costing."""
+        from repro.compiler import executor
+        return executor.make_runner(self, **kw)(self.params, x)
+
+    def to_command_stream(self, mode: str = "pipelined",
+                          **kw) -> codegen.CommandStream:
+        """Lower to the controller command stream (cycle estimates, runtime
+        scheduling) — any compiled model gets the paper's §3.3 artifact."""
+        return codegen.generate(self, mode=mode, **kw)
+
+
+# --------------------------------------------------------------------------
+# calibration: reference replay recording activation step sizes
+# --------------------------------------------------------------------------
+
+def _node_operands(g: Graph, n: Node):
+    w = g.initializers.get(n.inputs[1]) if len(n.inputs) > 1 else None
+    scale = (g.initializers.get(n.inputs[2])
+             if len(n.inputs) > 2 and n.inputs[2] else None)
+    bias = (g.initializers.get(n.inputs[3])
+            if len(n.inputs) > 3 and n.inputs[3] else None)
+    if w is None and n.op in _SERIAL_OPS:
+        raise GraphError(f"{n.name}: weight {n.inputs[1]!r} must be an "
+                         "initializer (dynamic weights cannot be packed)")
+    return w, scale, bias
+
+
+def _precision(n: Node) -> Dict:
+    p = n.attrs.get("precision")
+    if p is None:
+        raise GraphError(
+            f"node {n.name!r} has no precision annotation — run "
+            "passes.annotate_precision (or passes.run_pipeline) first")
+    return p
+
+
+def _calibrate(g: Graph, calib: jax.Array, radix_bits: int):
+    """Replay the graph on the calibration batch with the exact-integer
+    reference ops, recording per-node activation/weight step sizes."""
+    act_alphas: Dict[str, jax.Array] = {}
+    w_alphas: Dict[str, jax.Array] = {}
+    requant_alphas: Dict[str, jax.Array] = {}
+    env: Dict[str, jax.Array] = {k: jnp.asarray(v)
+                                 for k, v in g.initializers.items()}
+    env[next(iter(g.inputs))] = jnp.asarray(calib)
+
+    def epilogue(n: Node, y):
+        if n.attrs.get("relu"):
+            y = jnp.maximum(y, 0.0)
+        rq = n.attrs.get("requant")
+        if rq is not None:
+            spec = QuantSpec(rq["bits"], rq["signed"])
+            if rq.get("scale") is not None:
+                ra = jnp.asarray(rq["scale"], jnp.float32)
+            else:
+                ra = init_alpha(y, spec)
+            requant_alphas[n.name] = ra
+            y = quantize_int(y, ra, spec).astype(jnp.float32) * ra
+        return y
+
+    for n in g.toposorted():
+        x = env[n.inputs[0]] if n.real_inputs() else None
+        if n.op == "fused_conv2d":
+            w, scale, bias = _node_operands(g, n)
+            w = jnp.asarray(w)
+            st, pd = n.attrs.get("stride", 1), n.attrs.get("padding", 1)
+            prec = _precision(n)
+            if prec["mode"] == "host":
+                y = jax.lax.conv_general_dilated(
+                    x, w.astype(x.dtype), (st, st), [(pd, pd), (pd, pd)],
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"))
+                if scale is not None:
+                    y = y * jnp.asarray(scale)
+                if bias is not None:
+                    y = y + jnp.asarray(bias)
+            else:
+                wspec = QuantSpec(prec["w_bits"], prec["w_signed"],
+                                  per_channel=True)
+                aw = init_alpha(w, wspec, axis=(0, 1, 2))
+                wq = quantize_int(w, aw, wspec)
+                aspec = QuantSpec(prec["a_bits"], prec["a_signed"])
+                ax = init_alpha(x, aspec)
+                act_alphas[n.name], w_alphas[n.name] = ax, aw
+                xq = quantize_int(x, ax, aspec)
+                spec = plan_spec(SerialSpec(
+                    prec["a_bits"], prec["w_bits"], prec["a_signed"],
+                    prec["w_signed"], radix_bits))
+                acc = serial_conv2d(xq, wq, spec, stride=st, padding=pd)
+                co = w.shape[-1]
+                # the same float expression as the packed path's folded
+                # scaler, so recorded alphas match resnet9_pack bit-for-bit
+                y = acc.astype(jnp.float32) * (
+                    ax * aw.reshape(1, 1, 1, co)
+                    * (1.0 if scale is None else jnp.asarray(scale)))
+                if bias is not None:
+                    y = y + jnp.asarray(bias)
+            env[n.output] = epilogue(n, y)
+        elif n.op == "fused_gemm":
+            w, scale, bias = _node_operands(g, n)
+            w = jnp.asarray(w)
+            prec = _precision(n)
+            if prec["mode"] == "host":
+                y = x @ w.astype(x.dtype)
+                if scale is not None:
+                    y = y * jnp.asarray(scale)
+                if bias is not None:
+                    y = y + jnp.asarray(bias)
+            else:
+                wspec = QuantSpec(prec["w_bits"], prec["w_signed"],
+                                  per_channel=True)
+                aw = init_alpha(w, wspec, axis=0)
+                wq = quantize_int(w, aw, wspec)
+                aspec = QuantSpec(prec["a_bits"], prec["a_signed"])
+                ax = init_alpha(x, aspec)
+                act_alphas[n.name], w_alphas[n.name] = ax, aw
+                xq = quantize_int(x, ax, aspec)
+                spec = plan_spec(SerialSpec(
+                    prec["a_bits"], prec["w_bits"], prec["a_signed"],
+                    prec["w_signed"], radix_bits))
+                acc = serial_matmul(xq, wq, spec)
+                y = acc.astype(jnp.float32) * (
+                    ax * aw.reshape(1, -1)
+                    * (1.0 if scale is None else jnp.asarray(scale)))
+                y = y.reshape(x.shape[:-1] + (w.shape[-1],))
+                if bias is not None:
+                    y = y + jnp.asarray(bias)
+            env[n.output] = epilogue(n, y)
+        elif n.op == "maxpool":
+            env[n.output] = maxpool_relu(
+                x, n.attrs.get("window", 2),
+                n.attrs.get("stride", n.attrs.get("window", 2)),
+                with_relu=False)
+        elif n.op == "global_avg_pool":
+            env[n.output] = jnp.mean(x, axis=(1, 2))
+        elif n.op == "flatten":
+            env[n.output] = x.reshape(x.shape[0], -1)
+        elif n.op == "relu":
+            env[n.output] = jnp.maximum(x, 0)
+        elif n.op == "add":
+            env[n.output] = x + env[n.inputs[1]]
+        elif n.op == "requantize":
+            spec = QuantSpec(n.attrs.get("bits", 8),
+                             n.attrs.get("signed", True))
+            ra = (jnp.asarray(n.attrs["scale"], jnp.float32)
+                  if n.attrs.get("scale") is not None
+                  else init_alpha(x, spec))
+            requant_alphas[n.name] = ra
+            env[n.output] = (quantize_int(x, ra, spec).astype(jnp.float32)
+                             * ra)
+        else:
+            raise GraphError(f"{n.name}: cannot lower op {n.op!r} — run "
+                             "passes.run_pipeline first")
+    return act_alphas, w_alphas, requant_alphas
+
+
+# --------------------------------------------------------------------------
+# lowering proper
+# --------------------------------------------------------------------------
+
+def _is_serial(n: Optional[Node]) -> bool:
+    return (n is not None and n.op in _SERIAL_OPS
+            and n.attrs.get("precision", {}).get("mode") == "serial")
+
+
+def _output_plan(g: Graph, n: Node) -> Tuple[str, Optional[Node]]:
+    """Pick a serial node's output format from its consumers:
+    ``("packed", next_serial)`` / ``("codes", next_serial)`` (through one
+    maxpool) / ``("requant_codes", None)`` (an explicit fused requantize —
+    pinned or calibrated scale, both recorded in ``requant_alphas``) /
+    ``("float", None)``.
+
+    An explicit requantize always dominates: it is a *semantic* precision
+    bottleneck the graph requested, so it must be applied even when a
+    downstream serial consumer would otherwise absorb the quantization
+    (the consumer's own step then re-quantizes the bottlenecked tensor,
+    exactly as the calibration replay did)."""
+    rq = n.attrs.get("requant")
+    if rq is not None:
+        return "requant_codes", None
+    if n.output in g.outputs:
+        return "float", None
+    cons = g.consumers(n.output)
+    if len(cons) == 1:
+        c = cons[0]
+        if _is_serial(c) and c.inputs[0] == n.output:
+            return "packed", c
+        if c.op == "maxpool":
+            cc_list = g.consumers(c.output)
+            if (c.output not in g.outputs and len(cc_list) == 1
+                    and _is_serial(cc_list[0])
+                    and cc_list[0].inputs[0] == c.output):
+                return "codes", cc_list[0]
+    return "float", None
+
+
+def _plan_requant(g: Graph, n: Node, act_alphas: Dict, requant_alphas: Dict):
+    """Shared epilogue planning for serial conv/gemm nodes: returns
+    ``(out_kind, requant_scale, rq_bits, rq_signed, fmt_tuple)`` — the one
+    site deciding how a node's output leaves the kernel."""
+    out_kind, nxt = _output_plan(g, n)
+    if out_kind in ("packed", "codes"):
+        prec = _precision(nxt)
+        rq_bits, rq_signed = prec["a_bits"], prec["a_signed"]
+        return (out_kind, act_alphas[nxt.name], rq_bits, rq_signed,
+                (out_kind, nxt.name, rq_bits, rq_signed))
+    if out_kind == "requant_codes":
+        rq = n.attrs["requant"]
+        return (out_kind, requant_alphas[n.name], rq["bits"], rq["signed"],
+                ("codes", f"{n.name}::requant", rq["bits"], rq["signed"]))
+    return out_kind, None, None, None, ("float",)
+
+
+def compile_graph(g: Graph, calib, *,
+                  policy: Optional[QuantPolicy] = None,
+                  per_layer: Optional[Dict[str, Tuple[int, int]]] = None,
+                  backend: str = "xla", interpret: bool = False,
+                  run_passes: bool = True) -> Program:
+    """Compile an IR graph into an executable :class:`Program`.
+
+    ``calib``: calibration batch for the graph input (also sets the batch
+    geometry the tile autotuners optimize for). ``policy``: the
+    :class:`~repro.models.layers.QuantPolicy` driving precision annotation
+    (default: the paper's W2A2 serial policy); ``per_layer`` overrides
+    {node: (a_bits, w_bits)}. ``backend``/``interpret`` set the default
+    kernel dispatch (overridable per call).
+    """
+    if policy is None:
+        policy = QuantPolicy(mode="serial", w_bits=2, a_bits=2, radix_bits=7)
+    if run_passes:
+        g = passes.run_pipeline(g, policy, per_layer)
+    if len(g.inputs) != 1 or len(g.outputs) != 1:
+        raise GraphError("compile_graph supports single-input single-output "
+                         f"graphs (got {list(g.inputs)} -> {g.outputs})")
+    shapes = passes.infer_shapes(g)
+    calib = jnp.asarray(calib)
+    act_alphas, w_alphas, requant_alphas = _calibrate(
+        g, calib, policy.radix_bits)
+
+    input_name = next(iter(g.inputs))
+    steps: List[Step] = []
+    params: Dict[str, Dict] = {}
+    cost_nodes: List = []
+    per_layer_bits: Dict[str, Tuple[int, int]] = {}
+    meta: Dict = {"tiles": {}, "formats": {}}
+    # tensor -> ("float",) | ("codes"|"packed", alpha_key, bits, signed)
+    fmt: Dict[str, Tuple] = {input_name: ("float",)}
+
+    def as_float(tensor: str, ctx: str) -> str:
+        """Insert a dequant step if ``tensor`` currently holds codes."""
+        f = fmt[tensor]
+        if f[0] == "float":
+            return tensor
+        if f[0] == "codes":
+            name = f"{ctx}.dequant"
+            out = f"{tensor}::f32"
+            params[name] = {"alpha": _alpha_for(f[1])}
+            steps.append(Step(name, "dequant", (tensor,), out))
+            fmt[out] = ("float",)
+            return out
+        raise GraphError(f"{ctx}: cannot consume packed tensor {tensor!r} "
+                         "in the float domain")
+
+    def _alpha_for(key: str):
+        return (requant_alphas[key[:-len("::requant")]]
+                if key.endswith("::requant") else act_alphas[key])
+
+    def packed_input(n: Node, prec: Dict) -> str:
+        """Deliver node ``n``'s input in packed-plane format."""
+        t = n.inputs[0]
+        f = fmt[t]
+        bits, signed = prec["a_bits"], prec["a_signed"]
+        if f[0] == "packed":
+            if f[1:] != (n.name, bits, signed):
+                raise GraphError(f"{n.name}: packed input format {f} does "
+                                 "not match this node's quantization")
+            return t
+        if f[0] == "codes" and f[1:] == (n.name, bits, signed):
+            name = f"{n.name}.in_pack"
+            out = f"{t}::packed"
+            params[name] = {}
+            steps.append(Step(name, "pack_codes", (t,), out,
+                              {"bits": bits}))
+            fmt[out] = ("packed",) + f[1:]
+            return out
+        tf = as_float(t, n.name)
+        name = f"{n.name}.in_q"
+        out = f"{tf}::q{n.name}"
+        params[name] = {"act_alpha": act_alphas[n.name]}
+        steps.append(Step(name, "quantize_pack", (tf,), out,
+                          {"bits": bits, "signed": signed}))
+        fmt[out] = ("packed", n.name, bits, signed)
+        return out
+
+    for n in g.toposorted():
+        if n.op == "fused_conv2d":
+            w, scale, bias = _node_operands(g, n)
+            prec = _precision(n)
+            st, pd = n.attrs.get("stride", 1), n.attrs.get("padding", 1)
+            fh, fw_, ci, co = w.shape
+            xshape = shapes[n.inputs[0]]
+            if prec["mode"] == "host":
+                tin = as_float(n.inputs[0], n.name)
+                p = {"w": jnp.asarray(w)}
+                if scale is not None:
+                    p["scale"] = jnp.asarray(scale)
+                if bias is not None:
+                    p["bias"] = jnp.asarray(bias)
+                params[n.name] = p
+                steps.append(Step(n.name, "host_conv", (tin,), n.output,
+                                  {"stride": st, "padding": pd,
+                                   "relu": bool(n.attrs.get("relu"))}))
+                fmt[n.output] = ("float",)
+                cost_nodes.append(LoweredConv(
+                    n.name, ci, co, xshape[1], xshape[2], fh, fw_, st, pd,
+                    relu=bool(n.attrs.get("relu")), on_host=True))
+                continue
+            tin = packed_input(n, prec)
+            spec = plan_spec(SerialSpec(
+                prec["a_bits"], prec["w_bits"], prec["a_signed"],
+                prec["w_signed"], policy.radix_bits))
+            wspec = QuantSpec(prec["w_bits"], prec["w_signed"],
+                              per_channel=True)
+            aw = w_alphas[n.name]
+            qw = pack_conv_weights(jnp.asarray(w), wspec, aw)
+            ax = act_alphas[n.name]
+            folded = (ax * aw.reshape(1, 1, 1, co)
+                      * (1.0 if scale is None
+                         else jnp.asarray(scale))).reshape(co)
+            out_kind, rq_scale, rq_bits, rq_signed, out_fmt = _plan_requant(
+                g, n, act_alphas, requant_alphas)
+            p = {"w_packed": qw.packed, "scale": folded}
+            if bias is not None:
+                p["bias"] = jnp.asarray(bias)
+            if rq_scale is not None:
+                p["requant_scale"] = rq_scale
+            params[n.name] = p
+            n_calib = int(calib.shape[0])
+            tc = tuning.choose_conv_tile(
+                n_calib, xshape[1], xshape[2], ci, co, fh=fh, fw=fw_,
+                stride=st, padding=pd, spec=spec,
+                out_bits=rq_bits if out_kind == "packed" else None)
+            meta["tiles"][n.name] = tc
+            steps.append(Step(n.name, "conv_packed", (tin,), n.output, {
+                "spec": spec, "ci": ci, "stride": st, "padding": pd,
+                "relu": bool(n.attrs.get("relu")), "out": out_kind,
+                "requant_bits": rq_bits, "requant_signed": rq_signed,
+                "tile": tc.kernel_kwargs()}))
+            fmt[n.output] = out_fmt
+            cost_nodes.append(LoweredConv(
+                n.name, ci, co, xshape[1], xshape[2], fh, fw_, st, pd,
+                relu=bool(n.attrs.get("relu")), requant=rq_bits is not None))
+            per_layer_bits[n.name] = (prec["a_bits"], prec["w_bits"])
+        elif n.op == "fused_gemm":
+            w, scale, bias = _node_operands(g, n)
+            prec = _precision(n)
+            k, nn = w.shape
+            if prec["mode"] == "host":
+                tin = as_float(n.inputs[0], n.name)
+                p = {"w": jnp.asarray(w)}
+                if scale is not None:
+                    p["scale"] = jnp.asarray(scale)
+                if bias is not None:
+                    p["bias"] = jnp.asarray(bias)
+                params[n.name] = p
+                steps.append(Step(n.name, "host_gemm", (tin,), n.output,
+                                  {"relu": bool(n.attrs.get("relu"))}))
+                fmt[n.output] = ("float",)
+                cost_nodes.append(LoweredGemm(
+                    n.name, k, nn, relu=bool(n.attrs.get("relu")),
+                    on_host=True))
+                continue
+            tin = packed_input(n, prec)
+            spec = plan_spec(SerialSpec(
+                prec["a_bits"], prec["w_bits"], prec["a_signed"],
+                prec["w_signed"], policy.radix_bits))
+            wspec = QuantSpec(prec["w_bits"], prec["w_signed"],
+                              per_channel=True)
+            aw = w_alphas[n.name]
+            qw = pack_weights(jnp.asarray(w), wspec, aw)
+            ax = act_alphas[n.name]
+            folded = jnp.asarray(
+                ax * aw.reshape(-1)
+                * (1.0 if scale is None else jnp.asarray(scale)),
+                jnp.float32).reshape(nn)
+            out_kind, rq_scale, rq_bits, rq_signed, out_fmt = _plan_requant(
+                g, n, act_alphas, requant_alphas)
+            p = {"w_packed": qw.packed, "scale": folded}
+            if bias is not None:
+                p["bias"] = jnp.asarray(bias)
+            if rq_scale is not None:
+                p["requant_scale"] = rq_scale
+            params[n.name] = p
+            xshape = shapes[n.inputs[0]]
+            m = int(np.prod([d or int(calib.shape[0])
+                             for d in xshape[:-1]])) if xshape else 1
+            tc = tuning.choose_tile(
+                m, k, nn, spec,
+                out_bits=rq_bits if out_kind == "packed" else None)
+            meta["tiles"][n.name] = tc
+            steps.append(Step(n.name, "gemm_packed", (tin,), n.output, {
+                "spec": spec, "k": k, "relu": bool(n.attrs.get("relu")),
+                "out": out_kind, "requant_bits": rq_bits,
+                "requant_signed": rq_signed, "tile": tc.kernel_kwargs()}))
+            fmt[n.output] = out_fmt
+            cost_nodes.append(LoweredGemm(
+                n.name, k, nn, relu=bool(n.attrs.get("relu")),
+                requant=rq_bits is not None))
+            per_layer_bits[n.name] = (prec["a_bits"], prec["w_bits"])
+        elif n.op == "maxpool":
+            f = fmt[n.inputs[0]]
+            if f[0] == "packed":
+                raise GraphError(f"{n.name}: pooling packed planes directly "
+                                 "is unsupported (producer should emit codes)")
+            params[n.name] = {}
+            steps.append(Step(n.name, "maxpool", (n.inputs[0],), n.output, {
+                "window": n.attrs.get("window", 2),
+                "stride": n.attrs.get("stride", n.attrs.get("window", 2))}))
+            fmt[n.output] = f  # codes pool to codes, float to float
+        elif n.op == "global_avg_pool":
+            tin = as_float(n.inputs[0], n.name)
+            params[n.name] = {}
+            steps.append(Step(n.name, "global_pool", (tin,), n.output))
+            fmt[n.output] = ("float",)
+        elif n.op == "flatten":
+            tin = as_float(n.inputs[0], n.name)
+            params[n.name] = {}
+            steps.append(Step(n.name, "flatten", (tin,), n.output))
+            fmt[n.output] = ("float",)
+        elif n.op == "relu":
+            tin = as_float(n.inputs[0], n.name)
+            params[n.name] = {}
+            steps.append(Step(n.name, "relu", (tin,), n.output))
+            fmt[n.output] = ("float",)
+        elif n.op == "add":
+            a = as_float(n.inputs[0], n.name)
+            b = as_float(n.inputs[1], n.name)
+            params[n.name] = {}
+            steps.append(Step(n.name, "add", (a, b), n.output))
+            fmt[n.output] = ("float",)
+        elif n.op == "requantize":
+            tin = as_float(n.inputs[0], n.name)
+            params[n.name] = {"scale": requant_alphas[n.name]}
+            steps.append(Step(n.name, "fake_quant", (tin,), n.output, {
+                "bits": n.attrs.get("bits", 8),
+                "signed": n.attrs.get("signed", True)}))
+            fmt[n.output] = ("float",)
+        else:
+            raise GraphError(f"{n.name}: cannot lower op {n.op!r}")
+
+    out_name = g.outputs[0]
+    f = fmt[out_name]
+    if f[0] != "float":  # graph output must be host-readable
+        out_name = as_float(out_name, "output")
+    meta["formats"] = dict(fmt)
+    return Program(
+        graph_name=g.name, steps=tuple(steps), params=params,
+        input_name=input_name, output_name=out_name, backend=backend,
+        interpret=interpret, cost_nodes=cost_nodes,
+        per_layer_bits=per_layer_bits, meta=meta)

@@ -1,0 +1,227 @@
+"""Graph passes: shape/dtype inference, constant folding, epilogue fusion,
+precision annotation, dead-node elimination.
+
+The paper's generator applies no graph-level optimization (§3.3 "currently
+does not apply any optimization"); FINN-R and SPEED both show the wins live
+here — so this module is deliberately where the reproduction goes beyond
+the paper. Pass order in :func:`run_pipeline`:
+
+1. :func:`fold_constants` — evaluate initializer-only subgraphs offline
+   (followed by a first :func:`eliminate_dead`, since dead consumers would
+   otherwise pin fusion candidates),
+2. :func:`fuse_epilogues` — ``conv2d/gemm (+relu) (+requantize)`` collapse
+   into one ``fused_conv2d``/``fused_gemm`` node, matching the hardware's
+   scaler→bias→ReLU→quantizer pipeline modules (§3.1.4): the epilogue is
+   free on the MVU and fused into the kernel on TPU,
+3. :func:`annotate_precision` — per-layer ``(a_bits, w_bits)`` from a
+   :class:`~repro.models.layers.QuantPolicy` + per-layer overrides (SPEED:
+   precision plans are a compiler decision, not a hand pick),
+4. :func:`eliminate_dead` — drop nodes/initializers not reaching an output.
+
+:func:`infer_shapes` is a pure query (name → shape) used by the passes, by
+lowering (tile autotuning needs the geometry), and by the CommandStream
+linkage.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.compiler.ir import Graph, GraphError, Node
+from repro.models.layers import QuantPolicy
+
+__all__ = ["infer_shapes", "fold_constants", "fuse_epilogues",
+           "annotate_precision", "eliminate_dead", "run_pipeline",
+           "ShapeError"]
+
+
+class ShapeError(GraphError):
+    """Inconsistent tensor geometry discovered during inference."""
+
+
+def _conv_out(shape, wshape, stride, padding, name):
+    if len(shape) != 4 or len(wshape) != 4:
+        raise ShapeError(f"{name}: conv2d wants NHWC x HWIO, got "
+                         f"{shape} x {wshape}")
+    n, h, w, ci = shape
+    fh, fw, wci, co = wshape
+    if ci is not None and ci != wci:
+        raise ShapeError(f"{name}: input channels {ci} != weight Ci {wci}")
+    ho = (h + 2 * padding - fh) // stride + 1
+    wo = (w + 2 * padding - fw) // stride + 1
+    if ho <= 0 or wo <= 0:
+        raise ShapeError(f"{name}: empty output map {ho}x{wo} for input "
+                         f"{h}x{w} (filter {fh}x{fw}, stride {stride}, "
+                         f"padding {padding})")
+    return (n, ho, wo, co)
+
+
+def infer_shapes(g: Graph) -> Dict[str, Tuple]:
+    """Propagate shapes from graph inputs + initializers through every node.
+
+    Returns {tensor name: shape tuple}; leading batch dims may be ``None``
+    (deferred). Raises :class:`ShapeError` on inconsistent geometry.
+    """
+    shapes: Dict[str, Tuple] = {k: tuple(v) for k, v in g.inputs.items()}
+    shapes.update({k: tuple(v.shape) for k, v in g.initializers.items()})
+    for n in g.toposorted():
+        s = [shapes[i] for i in n.real_inputs()]
+        if n.op in ("conv2d", "fused_conv2d"):
+            shapes[n.output] = _conv_out(
+                shapes[n.inputs[0]], shapes[n.inputs[1]],
+                n.attrs.get("stride", 1), n.attrs.get("padding", 1), n.name)
+        elif n.op in ("gemm", "matmul", "fused_gemm"):
+            x, w = shapes[n.inputs[0]], shapes[n.inputs[1]]
+            if len(w) != 2 or not x or x[-1] != w[0]:
+                raise ShapeError(f"{n.name}: gemm {x} x {w} mismatch")
+            shapes[n.output] = x[:-1] + (w[1],)
+        elif n.op == "maxpool":
+            x = shapes[n.inputs[0]]
+            if len(x) != 4:
+                raise ShapeError(f"{n.name}: maxpool wants NHWC, got {x}")
+            win = n.attrs.get("window", 2)
+            st = n.attrs.get("stride", win)
+            ho, wo = (x[1] - win) // st + 1, (x[2] - win) // st + 1
+            if ho <= 0 or wo <= 0:
+                raise ShapeError(f"{n.name}: empty pooled map {ho}x{wo}")
+            shapes[n.output] = (x[0], ho, wo, x[3])
+        elif n.op == "global_avg_pool":
+            x = shapes[n.inputs[0]]
+            if len(x) != 4:
+                raise ShapeError(f"{n.name}: global pool wants NHWC, got {x}")
+            shapes[n.output] = (x[0], x[3])
+        elif n.op == "flatten":
+            x = shapes[n.inputs[0]]
+            if any(d is None for d in x[1:]):
+                raise ShapeError(f"{n.name}: cannot flatten deferred {x}")
+            flat = 1
+            for d in x[1:]:
+                flat *= d
+            shapes[n.output] = (x[0], flat)
+        elif n.op == "add":
+            a, b = s
+            if a != b:
+                raise ShapeError(f"{n.name}: add shapes {a} != {b}")
+            shapes[n.output] = a
+        elif n.op in ("relu", "requantize"):
+            shapes[n.output] = s[0]
+        else:  # ir.validate() already rejects unknown ops
+            raise GraphError(f"{n.name}: no shape rule for {n.op!r}")
+    return shapes
+
+
+def fold_constants(g: Graph) -> Graph:
+    """Evaluate nodes whose inputs are all initializers; the result becomes
+    an initializer and the node disappears (offline, numpy-only). Only ops
+    without optional ``""`` input slots fold — ``real_inputs()`` drops the
+    holes, so slot-carrying ops (conv2d/gemm) could mis-bind operands."""
+    foldable = {"relu": lambda a: np.maximum(a, 0),
+                "add": lambda a, b: a + b,
+                "flatten": lambda a: a.reshape(a.shape[0], -1),
+                "matmul": lambda a, b: a @ b}
+    changed = True
+    while changed:
+        changed = False
+        for n in list(g.nodes):
+            fn = foldable.get(n.op)
+            if fn is None or n.output in g.outputs:
+                continue
+            ins = n.real_inputs()
+            if not ins or not all(i in g.initializers for i in ins):
+                continue
+            g.initializers[n.output] = np.asarray(
+                fn(*[g.initializers[i] for i in ins]))
+            g.nodes.remove(n)
+            changed = True
+    return g
+
+
+def _single_consumer(g: Graph, tensor: str) -> Optional[Node]:
+    if tensor in g.outputs:
+        return None
+    cons = g.consumers(tensor)
+    return cons[0] if len(cons) == 1 else None
+
+
+def fuse_epilogues(g: Graph) -> Graph:
+    """``conv2d/gemm → relu? → requantize?`` chains collapse into a single
+    ``fused_*`` node carrying ``relu`` / ``requant`` attrs — the pipeline-
+    module epilogue the packed kernels execute in-register. Only sole-
+    consumer edges fuse (a forked intermediate must stay materialized)."""
+    for n in list(g.nodes):
+        if n.op not in ("conv2d", "gemm", "matmul"):
+            continue
+        n.op = "fused_conv2d" if n.op == "conv2d" else "fused_gemm"
+        n.attrs.setdefault("relu", False)
+        nxt = _single_consumer(g, n.output)
+        if nxt is not None and nxt.op == "relu":
+            n.attrs["relu"] = True
+            n.output = nxt.output
+            g.nodes.remove(nxt)
+            nxt = _single_consumer(g, n.output)
+        if nxt is not None and nxt.op == "requantize":
+            n.attrs["requant"] = {
+                "bits": nxt.attrs.get("bits", 8),
+                "signed": nxt.attrs.get("signed", True),
+                "scale": nxt.attrs.get("scale"),   # None -> calibrated
+            }
+            n.output = nxt.output
+            g.nodes.remove(nxt)
+    return g
+
+
+def annotate_precision(g: Graph, policy: QuantPolicy,
+                       per_layer: Optional[Dict[str, Tuple[int, int]]] = None,
+                       ) -> Graph:
+    """Stamp each compute node with its serial precisions (the per-MVU CSR
+    settings): ``attrs["precision"] = {mode, a_bits, w_bits, a_signed,
+    w_signed}``. Nodes marked ``host=True`` in the source graph stay full
+    precision on the host (paper §4.1: first/last layers). ``per_layer``
+    overrides {node name: (a_bits, w_bits)} — SPEED-style mixed precision
+    as a compiler input rather than a hand-edit of the model."""
+    per_layer = per_layer or {}
+    unknown = set(per_layer) - {n.name for n in g.nodes}
+    if unknown:
+        raise GraphError(f"per_layer precision for unknown nodes {unknown}")
+    for n in g.nodes:
+        if n.op not in ("conv2d", "fused_conv2d", "gemm", "matmul",
+                        "fused_gemm"):
+            continue
+        if n.attrs.get("host") or policy.mode != "serial":
+            n.attrs["precision"] = {"mode": "host"}
+            continue
+        ab, wb = per_layer.get(n.name, (policy.a_bits, policy.w_bits))
+        n.attrs["precision"] = {
+            "mode": "serial", "a_bits": int(ab), "w_bits": int(wb),
+            "a_signed": bool(policy.a_signed),
+            "w_signed": bool(policy.w_signed),
+        }
+    return g
+
+
+def eliminate_dead(g: Graph) -> Graph:
+    """Drop nodes and initializers that do not reach a graph output."""
+    live = set(g.outputs)
+    for n in reversed(g.toposorted()):
+        if n.output in live:
+            live.update(n.real_inputs())
+    g.nodes = [n for n in g.nodes if n.output in live]
+    g.initializers = {k: v for k, v in g.initializers.items() if k in live}
+    return g
+
+
+def run_pipeline(g: Graph, policy: QuantPolicy,
+                 per_layer: Optional[Dict[str, Tuple[int, int]]] = None,
+                 ) -> Graph:
+    """The standard pass order; returns the same (mutated) graph."""
+    g.validate()
+    infer_shapes(g)          # fail early on malformed geometry
+    fold_constants(g)
+    eliminate_dead(g)        # dead consumers would otherwise block fusion
+    fuse_epilogues(g)
+    annotate_precision(g, policy, per_layer)
+    eliminate_dead(g)
+    g.validate()
+    return g

@@ -68,14 +68,21 @@ class CommandStream:
 
 def _layer_job(layer, mvu: int, a_bits: int, w_bits: int,
                job_id: int, deps: Tuple[int, ...]) -> MVUJob:
-    if isinstance(layer, ConvLayer):
+    # Duck-typed so lowered compiler nodes (repro.compiler.lower.LoweredConv
+    # / LoweredGemm) map too: a fused conv+relu+requant epilogue is ONE
+    # CONV2D job with the scaler/ReLU/QuantSer pipeline modules enabled —
+    # the epilogue is free on the MVU (paper §3.1.4), not a separate op.
+    kind = getattr(layer, "kind", None)
+    if isinstance(layer, ConvLayer) or kind == "conv2d":
         return conv2d_job(mvu, layer.h, layer.w, layer.c_in, layer.c_out,
                           layer.fh, layer.fw, a_bits, w_bits,
                           stride=layer.stride, padding=layer.padding,
-                          tag=layer.name, depends_on=deps)
-    if isinstance(layer, LinearLayer):
+                          tag=layer.name, depends_on=deps,
+                          use_relu=bool(getattr(layer, "relu", True)))
+    if isinstance(layer, LinearLayer) or kind == "gemm":
         return gemv_job(mvu, layer.k, layer.n, a_bits, w_bits,
-                        tag=layer.name, depends_on=deps)
+                        tag=layer.name, depends_on=deps,
+                        use_relu=bool(getattr(layer, "relu", True)))
     raise TypeError(type(layer))
 
 
@@ -85,9 +92,20 @@ def generate(layers: Sequence, *, mode: str = "pipelined",
              ) -> CommandStream:
     """Emit the command stream for a sequential CNN/MLP graph.
 
+    ``layers`` is a sequence of cost-model layers (:class:`ConvLayer` /
+    :class:`LinearLayer`), a sequence of lowered compiler nodes, or a
+    compiled :class:`repro.compiler.lower.Program` directly — a Program
+    contributes its ``cost_nodes`` and its per-node precision annotations
+    (explicit ``per_layer_bits`` entries still override).
+
     ``per_layer_bits``: optional {layer_name: (a_bits, w_bits)} mixed
     precision map — each MVU is configured independently (paper §3.1.1).
     """
+    cost_nodes = getattr(layers, "cost_nodes", None)
+    if cost_nodes is not None:  # a compiled Program
+        per_layer_bits = {**getattr(layers, "per_layer_bits", {}),
+                          **(per_layer_bits or {})}
+        layers = cost_nodes
     jobs: List[MVUJob] = []
     per_layer_bits = per_layer_bits or {}
 

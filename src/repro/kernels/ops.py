@@ -87,6 +87,8 @@ def serial_matmul_packed_op(
     block_m: Optional[int] = None,
     block_n: Optional[int] = None,
     block_k: Optional[int] = None,
+    cache_weights: Optional[bool] = None,
+    cache_acts: Optional[bool] = None,
 ) -> jax.Array:
     """v2 fused serial matmul over **bit-packed activations**.
 
@@ -120,6 +122,12 @@ def serial_matmul_packed_op(
             tile_kwargs["block_n"] = block_n
         if block_k is not None:
             tile_kwargs["block_k"] = block_k
+        # AOT-tuned configs (the compiler) pin the cache flags too — without
+        # these, explicit blocks would silently fall back to kernel defaults
+        if cache_weights is not None:
+            tile_kwargs["cache_weights"] = cache_weights
+        if cache_acts is not None:
+            tile_kwargs["cache_acts"] = cache_acts
         out = bitserial_matmul_v2_pallas(
             x2, w_packed, scale, bias, spec=spec, k=k, relu=relu,
             out_dtype=out_dtype, requant=requant,
@@ -157,6 +165,8 @@ def serial_conv2d_packed_op(
     interpret: bool = False,
     block_co: Optional[int] = None,
     block_nb: Optional[int] = None,
+    cache_weights: Optional[bool] = None,
+    cache_acts: Optional[bool] = None,
 ) -> jax.Array:
     """Fused implicit-GEMM serial conv2d over **bit-packed activations**.
 
@@ -179,6 +189,10 @@ def serial_conv2d_packed_op(
     if backend == "pallas_v2":
         if block_co is not None and block_nb is not None:
             tile_kwargs = dict(block_co=block_co, block_nb=block_nb)
+            if cache_weights is not None:
+                tile_kwargs["cache_weights"] = cache_weights
+            if cache_acts is not None:
+                tile_kwargs["cache_acts"] = cache_acts
         else:
             # pinned axes constrain the tuner; the rest (other axis + cache
             # flags) is still tuned and VMEM-validated jointly

@@ -39,7 +39,8 @@ from repro.kernels.ops import pack_activations, serial_conv2d_packed_op
 
 __all__ = ["ResNet9Config", "resnet9_init", "resnet9_quantize_weights",
            "resnet9_forward", "resnet9_forward_float", "resnet9_pack",
-           "resnet9_forward_packed"]
+           "resnet9_forward_packed", "resnet9_graph", "resnet9_compile",
+           "resnet9_cost_layers"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -225,6 +226,91 @@ def resnet9_forward_packed(packed: Dict, images: jax.Array,
                 emit_packed=True, **common)
     x = jnp.mean(x, axis=(1, 2))  # global average pool
     return x @ packed["fc"]["w"]  # last layer on host
+
+
+def resnet9_graph(params: Dict, cfg: ResNet9Config = ResNet9Config(), *,
+                  input_hw: int = 32):
+    """Re-express ResNet9 as a compiler IR graph (paper §3.3 front end).
+
+    The third route to the same function: ``resnet9_forward`` (reference),
+    ``resnet9_forward_packed`` (hand-written deployment), and now
+    ``compile_graph(resnet9_graph(params), calib)`` — the graph-compiler
+    path, proven bit-exact against the hand-written one in
+    ``tests/test_compiler_exec.py``. conv0 and fc are marked ``host=True``
+    (first/last layers full precision on the host, paper §4.1); hidden
+    convs carry explicit scale/bias initializer slots (the scaler/bias RAM
+    contents).
+    """
+    from repro.compiler.ir import Graph, Node
+    inits = {"conv0.w": np.asarray(params["conv0"]["w"]),
+             "fc.w": np.asarray(params["fc"]["w"])}
+    nodes = [
+        Node("conv0", "conv2d", ["images", "conv0.w"], "conv0.y",
+             {"stride": 1, "padding": 1, "host": True}),
+        Node("conv0.relu", "relu", ["conv0.y"], "conv0.out"),
+    ]
+    x = "conv0.out"
+    for name, ci, co, stride, pool in cfg.layers:
+        inits[f"{name}.w"] = np.asarray(params[name]["w"])
+        inits[f"{name}.scale"] = np.asarray(params[name]["scale"])
+        inits[f"{name}.bias"] = np.asarray(params[name]["bias"])
+        nodes.append(Node(name, "conv2d",
+                          [x, f"{name}.w", f"{name}.scale", f"{name}.bias"],
+                          f"{name}.y", {"stride": stride, "padding": 1}))
+        nodes.append(Node(f"{name}.relu", "relu", [f"{name}.y"],
+                          f"{name}.r"))
+        x = f"{name}.r"
+        if pool:
+            nodes.append(Node(f"{name}.pool", "maxpool", [x],
+                              f"{name}.p", {"window": 2}))
+            x = f"{name}.p"
+    nodes.append(Node("gap", "global_avg_pool", [x], "pooled"))
+    nodes.append(Node("fc", "gemm", ["pooled", "fc.w"], "logits",
+                      {"host": True}))
+    g = Graph(name="resnet9_cifar10",
+              inputs={"images": (None, input_hw, input_hw, 3)},
+              outputs=["logits"], nodes=nodes, initializers=inits)
+    g.validate()
+    return g
+
+
+def resnet9_cost_layers(cfg: ResNet9Config = ResNet9Config()):
+    """Hand-built cost-model layer list with the *runnable* model's
+    geometry (pool stages shrink the late maps — unlike
+    ``cost_model.RESNET9_CIFAR10``, which reproduces the paper Table 3
+    print where downsampling is stride-only). This is the hand-written
+    codegen path the compiled Program's CommandStream is checked against.
+    """
+    from repro.core.cost_model import ConvLayer, LinearLayer
+    layers = [ConvLayer("conv0", 3, 64, 32, 32, on_host=True)]
+    h = 32
+    for name, ci, co, stride, pool in cfg.layers:
+        layers.append(ConvLayer(name, ci, co, h, h, stride=stride))
+        h = (h - 1) // stride + 1
+        if pool:
+            h //= 2
+    layers.append(LinearLayer("fc", cfg.layers[-1][2], cfg.num_classes,
+                              on_host=True))
+    return layers
+
+
+def resnet9_compile(params: Dict, calib_images: jax.Array,
+                    cfg: ResNet9Config = ResNet9Config(), *,
+                    backend: str = "pallas_v2", interpret: bool = False,
+                    per_layer=None, input_hw: int = 32):
+    """Compile ResNet9 through the graph compiler — the deployment default
+    (equivalent to ``resnet9_pack`` + ``resnet9_forward_packed``, but
+    produced by the generic IR → passes → lowering pipeline, so it also
+    yields the CommandStream / cycle estimates via
+    ``Program.to_command_stream()``)."""
+    from repro.compiler import compile_graph
+    from repro.models.layers import QuantPolicy
+    policy = QuantPolicy(mode="serial", w_bits=cfg.w_bits, a_bits=cfg.a_bits,
+                         radix_bits=cfg.radix_bits, backend=backend,
+                         interpret=interpret)
+    return compile_graph(resnet9_graph(params, cfg, input_hw=input_hw),
+                         calib_images, policy=policy, per_layer=per_layer,
+                         backend=backend, interpret=interpret)
 
 
 def resnet9_forward_float(params: Dict, images: jax.Array,

@@ -1,0 +1,227 @@
+"""Compiler front end: IR validation, the native dict/JSON format, shape
+inference (incl. ragged geometry and error paths), precision annotation
+round-trip, and importer error behaviour (native + optional ONNX)."""
+
+import numpy as np
+import pytest
+
+from repro.compiler import (Graph, GraphError, Node, UnsupportedOpError,
+                            annotate_precision, graph_from_dict,
+                            graph_to_dict, infer_shapes)
+from repro.compiler.onnx_import import HAS_ONNX, import_onnx
+from repro.compiler.passes import ShapeError
+from repro.models.layers import QuantPolicy
+
+
+def _tiny_graph(ci=8, co=16, h=8, w=8):
+    rng = np.random.RandomState(0)
+    return Graph(
+        "tiny", {"x": (None, h, w, ci)}, ["out"],
+        [Node("c1", "conv2d", ["x", "c1.w"], "c1.y",
+              {"stride": 1, "padding": 1}),
+         Node("r1", "relu", ["c1.y"], "c1.o"),
+         Node("gap", "global_avg_pool", ["c1.o"], "p"),
+         Node("fc", "gemm", ["p", "fc.w"], "out", {"host": True})],
+        {"c1.w": rng.randn(3, 3, ci, co).astype(np.float32),
+         "fc.w": rng.randn(co, 10).astype(np.float32)})
+
+
+# ------------------------------------------------------------- IR validation
+
+def test_validate_ok():
+    _tiny_graph().validate()
+
+
+def test_unsupported_op_rejected():
+    g = _tiny_graph()
+    g.nodes.insert(0, Node("s", "softmax", ["x"], "sx"))
+    with pytest.raises(UnsupportedOpError, match="softmax"):
+        g.validate()
+
+
+def test_undefined_tensor_rejected():
+    g = _tiny_graph()
+    g.nodes[0].inputs[0] = "nope"
+    with pytest.raises(GraphError, match="undefined tensor"):
+        g.validate()
+
+
+def test_duplicate_definition_rejected():
+    g = _tiny_graph()
+    g.nodes.append(Node("dup", "relu", ["c1.y"], "c1.o"))
+    with pytest.raises(GraphError, match="redefines"):
+        g.validate()
+
+
+def test_missing_output_rejected():
+    g = _tiny_graph()
+    g.outputs = ["missing"]
+    with pytest.raises(GraphError, match="never defined"):
+        g.validate()
+
+
+# ------------------------------------------------------ native dict / JSON
+
+def test_dict_round_trip_preserves_everything():
+    g = _tiny_graph()
+    g2 = graph_from_dict(graph_to_dict(g))
+    assert [n.name for n in g2.nodes] == [n.name for n in g.nodes]
+    assert [n.op for n in g2.nodes] == [n.op for n in g.nodes]
+    assert g2.inputs == g.inputs and g2.outputs == g.outputs
+    for k, v in g.initializers.items():
+        np.testing.assert_array_equal(g2.initializers[k], v)
+        assert g2.initializers[k].dtype == v.dtype
+
+
+def test_dict_import_rejects_wrong_format():
+    with pytest.raises(GraphError, match="repro-graph-v1"):
+        graph_from_dict({"format": "other", "inputs": {}, "outputs": [],
+                         "nodes": []})
+
+
+def test_dict_import_rejects_unsupported_op():
+    d = graph_to_dict(_tiny_graph())
+    d["nodes"][0]["op"] = "lstm"
+    with pytest.raises(UnsupportedOpError, match="lstm"):
+        graph_from_dict(d)
+
+
+# ---------------------------------------------------------- shape inference
+
+def test_shapes_ragged():
+    """Nothing divides anything: 33 channels, 7x9 maps, stride 2."""
+    rng = np.random.RandomState(1)
+    g = Graph(
+        "ragged", {"x": (3, 7, 9, 33)}, ["out"],
+        [Node("c", "conv2d", ["x", "w"], "cy", {"stride": 2, "padding": 1}),
+         Node("m", "maxpool", ["cy"], "my", {"window": 2}),
+         Node("f", "flatten", ["my"], "out")],
+        {"w": rng.randn(3, 3, 33, 17).astype(np.float32)})
+    s = infer_shapes(g)
+    assert s["cy"] == (3, 4, 5, 17)
+    assert s["my"] == (3, 2, 2, 17)
+    assert s["out"] == (3, 2 * 2 * 17)
+
+
+def test_shapes_deferred_batch():
+    s = infer_shapes(_tiny_graph())
+    assert s["c1.y"] == (None, 8, 8, 16)
+    assert s["out"] == (None, 10)
+
+
+def test_shapes_channel_mismatch():
+    g = _tiny_graph(ci=8)
+    g.inputs["x"] = (None, 8, 8, 12)
+    with pytest.raises(ShapeError, match="channels"):
+        infer_shapes(g)
+
+
+def test_shapes_empty_output_map():
+    g = _tiny_graph(h=1, w=1)
+    g.nodes[0].attrs["padding"] = 0
+    with pytest.raises(ShapeError, match="empty output"):
+        infer_shapes(g)
+
+
+def test_shapes_gemm_mismatch():
+    g = _tiny_graph(co=16)
+    g.initializers["fc.w"] = g.initializers["fc.w"][:7]
+    with pytest.raises(ShapeError, match="gemm"):
+        infer_shapes(g)
+
+
+def test_shapes_add_mismatch():
+    g = _tiny_graph()
+    g.nodes.insert(2, Node("a", "add", ["c1.o", "x"], "ay"))
+    g.nodes[3] = Node("gap", "global_avg_pool", ["ay"], "p")
+    with pytest.raises(ShapeError, match="add"):
+        infer_shapes(g)
+
+
+# ------------------------------------------------- precision annotation r/t
+
+def test_precision_annotation_round_trip():
+    g = _tiny_graph()
+    pol = QuantPolicy(mode="serial", w_bits=3, a_bits=5)
+    annotate_precision(g, pol, per_layer={"c1": (2, 4)})
+    g2 = graph_from_dict(graph_to_dict(g))
+    p = g2.node("c1").attrs["precision"]
+    assert p == {"mode": "serial", "a_bits": 2, "w_bits": 4,
+                 "a_signed": True, "w_signed": True}
+    # host-marked node stays host regardless of the policy
+    assert g2.node("fc").attrs["precision"] == {"mode": "host"}
+
+
+def test_precision_annotation_unknown_layer():
+    with pytest.raises(GraphError, match="unknown nodes"):
+        annotate_precision(_tiny_graph(),
+                           QuantPolicy(mode="serial"), {"nope": (2, 2)})
+
+
+# ------------------------------------------------------------ ONNX importer
+
+def test_onnx_importer_absent_raises_descriptive_error():
+    if HAS_ONNX:
+        pytest.skip("onnx installed — absence branch not reachable")
+    with pytest.raises(ImportError, match="optional 'onnx' package"):
+        import_onnx("whatever.onnx")
+
+
+@pytest.mark.skipif(not HAS_ONNX, reason="optional onnx not installed")
+def test_onnx_importer_subset_and_rejection():
+    import onnx
+    from onnx import helper, numpy_helper
+    rng = np.random.RandomState(0)
+    w = rng.randn(4, 3, 3, 3).astype(np.float32)         # OIHW
+    model = helper.make_model(helper.make_graph(
+        [helper.make_node("Conv", ["x", "w"], ["c"], strides=[1, 1],
+                          pads=[1, 1, 1, 1]),
+         helper.make_node("Relu", ["c"], ["y"])],
+        "t",
+        [helper.make_tensor_value_info("x", onnx.TensorProto.FLOAT,
+                                       [1, 3, 8, 8])],
+        [helper.make_tensor_value_info("y", onnx.TensorProto.FLOAT,
+                                       [1, 4, 8, 8])],
+        [numpy_helper.from_array(w, "w")]))
+    g = import_onnx(model)
+    assert [n.op for n in g.nodes] == ["conv2d", "relu"]
+    assert g.inputs["x"] == (1, 8, 8, 3)                 # NCHW -> NHWC
+    assert g.initializers["w"].shape == (3, 3, 3, 4)     # OIHW -> HWIO
+    # unsupported op refuses loudly
+    bad = helper.make_model(helper.make_graph(
+        [helper.make_node("Softmax", ["x"], ["y"])], "b",
+        [helper.make_tensor_value_info("x", onnx.TensorProto.FLOAT, [1, 4])],
+        [helper.make_tensor_value_info("y", onnx.TensorProto.FLOAT, [1, 4])],
+        []))
+    with pytest.raises(UnsupportedOpError, match="Softmax"):
+        import_onnx(bad)
+    # silent-geometry attributes refuse instead of defaulting
+    for kw, msg in ((dict(strides=[1, 1], auto_pad="SAME_UPPER"),
+                     "auto_pad"),
+                    (dict(strides=[1, 1], pads=[1, 1, 1, 1],
+                          dilations=[2, 2]), "dilations")):
+        m = helper.make_model(helper.make_graph(
+            [helper.make_node("Conv", ["x", "w"], ["y"], **kw)], "g",
+            [helper.make_tensor_value_info("x", onnx.TensorProto.FLOAT,
+                                           [1, 3, 8, 8])],
+            [helper.make_tensor_value_info("y", onnx.TensorProto.FLOAT,
+                                           [1, 4, 8, 8])],
+            [numpy_helper.from_array(w, "w")]))
+        with pytest.raises(UnsupportedOpError, match=msg):
+            import_onnx(m)
+    # a weight initializer shared by two Convs transposes exactly once
+    w_tied = rng.randn(3, 3, 3, 3).astype(np.float32)      # OIHW, Ci == Co
+    shared = helper.make_model(helper.make_graph(
+        [helper.make_node("Conv", ["x", "w"], ["a"], strides=[1, 1],
+                          pads=[1, 1, 1, 1]),
+         helper.make_node("Relu", ["a"], ["ar"]),
+         helper.make_node("Conv", ["ar", "w"], ["y"], strides=[1, 1],
+                          pads=[1, 1, 1, 1])], "tied",
+        [helper.make_tensor_value_info("x", onnx.TensorProto.FLOAT,
+                                       [1, 3, 8, 8])],
+        [helper.make_tensor_value_info("y", onnx.TensorProto.FLOAT,
+                                       [1, 3, 8, 8])],
+        [numpy_helper.from_array(w_tied, "w")]))
+    np.testing.assert_array_equal(
+        import_onnx(shared).initializers["w"],
+        np.transpose(w_tied, (2, 3, 1, 0)))  # once, not twice

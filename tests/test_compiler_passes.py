@@ -1,0 +1,243 @@
+"""Pass pipeline: constant folding, epilogue fusion (correctness under
+stride/padding variants against the dense reference), explicit-requantize
+fusion, and dead-node elimination."""
+
+import numpy as np
+import jax
+import jax.lax as lax
+import jax.numpy as jnp
+import pytest
+
+from repro.compiler import (Graph, Node, compile_graph, eliminate_dead,
+                            fold_constants, fuse_epilogues, run_pipeline)
+from repro.core.quant import QuantSpec, init_alpha, quantize_int
+from repro.models.layers import QuantPolicy
+
+POLICY = QuantPolicy(mode="serial", w_bits=4, a_bits=4, radix_bits=7)
+
+
+# ---------------------------------------------------------- constant folding
+
+def test_fold_constants_collapses_initializer_subgraph():
+    rng = np.random.RandomState(0)
+    a = rng.randn(4, 4).astype(np.float32)
+    b = rng.randn(4, 4).astype(np.float32)
+    g = Graph("fold", {"x": (None, 4)}, ["out"],
+              [Node("s", "add", ["a", "b"], "ab"),
+               Node("r", "relu", ["ab"], "abr"),
+               Node("mm", "matmul", ["x", "abr"], "out")],
+              {"a": a, "b": b})
+    fold_constants(g)
+    assert [n.name for n in g.nodes] == ["mm"]
+    np.testing.assert_allclose(g.initializers["abr"], np.maximum(a + b, 0))
+
+
+def test_fold_constants_keeps_graph_outputs():
+    a = np.ones((2, 2), np.float32)
+    g = Graph("keep", {"x": (2, 2)}, ["y"],
+              [Node("r", "relu", ["a"], "y")], {"a": a})
+    fold_constants(g)  # output-producing nodes must not fold away
+    assert [n.name for n in g.nodes] == ["r"]
+
+
+# ------------------------------------------------------------------- fusion
+
+def test_fuse_conv_relu_requant_chain():
+    rng = np.random.RandomState(0)
+    g = Graph("f", {"x": (1, 6, 6, 8)}, ["out"],
+              [Node("c", "conv2d", ["x", "w"], "cy"),
+               Node("r", "relu", ["cy"], "ry"),
+               Node("q", "requantize", ["ry"], "out",
+                    {"bits": 6, "signed": True, "scale": 0.25})],
+              {"w": rng.randn(3, 3, 8, 8).astype(np.float32)})
+    fuse_epilogues(g)
+    assert len(g.nodes) == 1
+    n = g.nodes[0]
+    assert n.op == "fused_conv2d" and n.attrs["relu"]
+    assert n.attrs["requant"] == {"bits": 6, "signed": True, "scale": 0.25}
+    assert n.output == "out"
+
+
+def test_fusion_stops_at_forked_edges():
+    rng = np.random.RandomState(0)
+    g = Graph("fork", {"x": (1, 6, 6, 8)}, ["out", "cy"],
+              [Node("c", "conv2d", ["x", "w"], "cy"),
+               Node("r", "relu", ["cy"], "out")],  # cy is also a graph output
+              {"w": rng.randn(3, 3, 8, 8).astype(np.float32)})
+    fuse_epilogues(g)
+    assert [n.op for n in g.nodes] == ["fused_conv2d", "relu"]
+
+
+def _reference_serial_conv(x, w, stride, padding, ab, wb, relu=True):
+    """The exact quantized conv the compiled kernel must reproduce."""
+    aspec, wspec = QuantSpec(ab, True), QuantSpec(wb, True, per_channel=True)
+    ax = init_alpha(jnp.asarray(x), aspec)
+    aw = init_alpha(jnp.asarray(w), wspec, axis=(0, 1, 2))
+    xq = quantize_int(jnp.asarray(x), ax, aspec).astype(jnp.float32)
+    wq = quantize_int(jnp.asarray(w), aw, wspec).astype(jnp.float32)
+    acc = lax.conv_general_dilated(
+        xq, wq, (stride, stride), [(padding, padding)] * 2,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    co = w.shape[-1]
+    y = acc * (ax * aw.reshape(1, 1, 1, co))
+    return jnp.maximum(y, 0) if relu else y
+
+
+@pytest.mark.parametrize("stride,padding", [(1, 1), (2, 1), (1, 0), (2, 0)])
+def test_fused_conv_correct_under_stride_padding(stride, padding):
+    """Fusion + lowering must not change the math for any conv geometry."""
+    rng = np.random.RandomState(stride * 10 + padding)
+    x = rng.rand(2, 7, 9, 33).astype(np.float32)
+    w = (rng.randn(3, 3, 33, 17) * 0.3).astype(np.float32)
+    g = Graph("sp", {"x": (None, 7, 9, 33)}, ["out"],
+              [Node("c", "conv2d", ["x", "w"], "cy",
+                    {"stride": stride, "padding": padding}),
+               Node("r", "relu", ["cy"], "out")],
+              {"w": w})
+    prog = compile_graph(g, x, policy=POLICY, backend="xla")
+    ref = _reference_serial_conv(x, w, stride, padding, POLICY.a_bits,
+                                 POLICY.w_bits)
+    np.testing.assert_allclose(np.asarray(prog(jnp.asarray(x))),
+                               np.asarray(ref), rtol=1e-6, atol=1e-6)
+
+
+def test_fused_requant_pinned_scale_matches_fake_quant():
+    """conv+relu+requant(pinned scale) compiles to a codes-emitting kernel;
+    result == fake-quant of the fused-conv output."""
+    rng = np.random.RandomState(3)
+    x = rng.rand(2, 6, 6, 16).astype(np.float32)
+    w = (rng.randn(3, 3, 16, 8) * 0.3).astype(np.float32)
+    scale = 0.02
+    g = Graph("rq", {"x": (None, 6, 6, 16)}, ["out"],
+              [Node("c", "conv2d", ["x", "w"], "cy",
+                    {"stride": 1, "padding": 1}),
+               Node("r", "relu", ["cy"], "ry"),
+               Node("q", "requantize", ["ry"], "out",
+                    {"bits": 6, "signed": True, "scale": scale})],
+              {"w": w})
+    prog = compile_graph(g, x, policy=POLICY, backend="xla")
+    y = _reference_serial_conv(x, w, 1, 1, POLICY.a_bits, POLICY.w_bits)
+    codes = jnp.clip(jnp.round(y / scale), -32, 31)
+    np.testing.assert_allclose(np.asarray(prog(jnp.asarray(x))),
+                               np.asarray(codes * scale), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_fused_requant_calibrated_scale_is_honored():
+    """A scale-less (calibrated) requantize fused into a gemm must still
+    bottleneck the output: 1-bit unsigned requant -> at most 2 distinct
+    values, matching fake-quant with the calibration-derived step size."""
+    rng = np.random.RandomState(5)
+    x = rng.rand(4, 16).astype(np.float32)
+    w = (rng.randn(16, 8) * 0.3).astype(np.float32)
+    g = Graph("rq_cal", {"x": (None, 16)}, ["out"],
+              [Node("fc", "gemm", ["x", "w"], "fy"),
+               Node("r", "relu", ["fy"], "ry"),
+               Node("q", "requantize", ["ry"], "out",
+                    {"bits": 1, "signed": False})],  # no pinned scale
+              {"w": w})
+    prog = compile_graph(g, x, policy=POLICY, backend="xla")
+    out = np.asarray(prog(jnp.asarray(x)))
+    assert len(np.unique(out)) <= 2, "calibrated requant bottleneck dropped"
+    # matches fake-quant of the fused-gemm output with the calibrated alpha
+    aspec, wspec = (QuantSpec(POLICY.a_bits, True),
+                    QuantSpec(POLICY.w_bits, True, per_channel=True))
+    ax = init_alpha(jnp.asarray(x), aspec)
+    aw = init_alpha(jnp.asarray(w), wspec, axis=0)
+    y = (quantize_int(jnp.asarray(x), ax, aspec).astype(jnp.float32)
+         @ quantize_int(jnp.asarray(w), aw, wspec).astype(jnp.float32))
+    y = jnp.maximum(y * (ax * aw.reshape(1, -1)), 0)
+    ra = init_alpha(y, QuantSpec(1, False))
+    ref = jnp.clip(jnp.round(y / ra), 0, 1) * ra
+    np.testing.assert_allclose(out, np.asarray(ref), rtol=1e-6, atol=1e-7)
+
+
+def test_fused_requant_before_serial_consumer_still_applies():
+    """requantize between two serial convs: the bottleneck must survive —
+    the downstream conv consumes the *requantized* tensor (compiled output
+    == compiled output of a graph whose input is the fake-quant tensor)."""
+    rng = np.random.RandomState(7)
+    x = rng.rand(2, 6, 6, 8).astype(np.float32)
+    w1 = (rng.randn(3, 3, 8, 8) * 0.4).astype(np.float32)
+    w2 = (rng.randn(3, 3, 8, 8) * 0.4).astype(np.float32)
+
+    def build(with_requant):
+        nodes = [Node("c1", "conv2d", ["x", "w1"], "c1y"),
+                 Node("r1", "relu", ["c1y"], "c1o")]
+        t = "c1o"
+        if with_requant:
+            nodes.append(Node("q", "requantize", [t], "qy",
+                              {"bits": 1, "signed": False}))
+            t = "qy"
+        nodes += [Node("c2", "conv2d", [t, "w2"], "c2y"),
+                  Node("r2", "relu", ["c2y"], "c2o"),
+                  Node("gap", "global_avg_pool", ["c2o"], "out")]
+        return Graph("rq2", {"x": (None, 6, 6, 8)}, ["out"], nodes,
+                     {"w1": w1, "w2": w2})
+
+    out_rq = np.asarray(compile_graph(build(True), x, policy=POLICY,
+                                      backend="xla")(jnp.asarray(x)))
+    out_plain = np.asarray(compile_graph(build(False), x, policy=POLICY,
+                                         backend="xla")(jnp.asarray(x)))
+    # the 1-bit bottleneck must change the function (not be silently lost)
+    assert not np.allclose(out_rq, out_plain)
+
+
+# ---------------------------------------------------------------------- DCE
+
+def test_eliminate_dead_drops_orphan_branch():
+    rng = np.random.RandomState(0)
+    g = Graph("dce", {"x": (1, 6, 6, 8)}, ["out"],
+              [Node("c", "conv2d", ["x", "w"], "cy"),
+               Node("dead", "relu", ["cy"], "unused"),
+               Node("gap", "global_avg_pool", ["cy"], "out")],
+              {"w": rng.randn(3, 3, 8, 8).astype(np.float32),
+               "orphan": np.ones((3,), np.float32)})
+    eliminate_dead(g)
+    assert [n.name for n in g.nodes] == ["c", "gap"]
+    assert "orphan" not in g.initializers
+
+
+# -------------------------------------------------------- pipeline together
+
+def test_run_pipeline_end_to_end_shape():
+    rng = np.random.RandomState(0)
+    g = Graph("pipe", {"x": (None, 8, 8, 8)}, ["out"],
+              [Node("c", "conv2d", ["x", "w"], "cy"),
+               Node("r", "relu", ["cy"], "ry"),
+               Node("dead", "relu", ["cy"], "unused"),
+               Node("gap", "global_avg_pool", ["ry"], "p"),
+               Node("fc", "gemm", ["p", "fw"], "out", {"host": True})],
+              {"w": rng.randn(3, 3, 8, 8).astype(np.float32),
+               "fw": rng.randn(8, 4).astype(np.float32)})
+    run_pipeline(g, POLICY)
+    ops = [n.op for n in g.nodes]
+    assert ops == ["fused_conv2d", "global_avg_pool", "fused_gemm"]
+    assert g.node("c").attrs["precision"]["mode"] == "serial"
+    assert g.node("fc").attrs["precision"]["mode"] == "host"
+
+
+def test_mixed_precision_per_layer_runs():
+    """SPEED-style per-layer precision plan through the whole flow."""
+    rng = np.random.RandomState(0)
+    x = rng.rand(2, 8, 8, 8).astype(np.float32)
+    g = Graph("mp", {"x": (None, 8, 8, 8)}, ["out"],
+              [Node("c1", "conv2d", ["x", "w1"], "c1y"),
+               Node("r1", "relu", ["c1y"], "c1o"),
+               Node("c2", "conv2d", ["c1o", "w2"], "c2y"),
+               Node("r2", "relu", ["c2y"], "c2o"),
+               Node("gap", "global_avg_pool", ["c2o"], "out")],
+              {"w1": (rng.randn(3, 3, 8, 8) * 0.3).astype(np.float32),
+               "w2": (rng.randn(3, 3, 8, 8) * 0.3).astype(np.float32)})
+    prog = compile_graph(g, x, policy=POLICY,
+                         per_layer={"c1": (8, 8), "c2": (2, 2)},
+                         backend="xla")
+    assert prog.per_layer_bits == {"c1": (8, 8), "c2": (2, 2)}
+    out = prog(jnp.asarray(x))
+    assert out.shape == (2, 8)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # the per-node precisions reach the command stream
+    cs = prog.to_command_stream()
+    bits = {j.tag: (j.a_bits, j.w_bits) for j in cs.jobs
+            if j.tag in ("c1", "c2")}
+    assert bits == {"c1": (8, 8), "c2": (2, 2)}
