@@ -4,12 +4,15 @@ machine-readable ``BENCH_kernels.json`` (name → us_per_call + derived) so
 the perf trajectory is tracked PR-over-PR. Conv-kernel + ResNet9
 end-to-end rows are additionally dumped to ``BENCH_conv.json``; the graph-
 compiler rows (compiled vs hand-written packed path, executor dispatch
-overhead) to ``BENCH_compile.json``.
+overhead) to ``BENCH_compile.json``; the serving-runtime rows (bucketed
+steady-state vs re-jit-per-shape, latency percentiles, precision mix) to
+``BENCH_serving.json``.
 
 Run: PYTHONPATH=src python -m benchmarks.run
-     [--only kernels,tables,conv,compile]
+     [--only kernels,tables,conv,compile,serving]
      [--json BENCH_kernels.json] [--conv-json BENCH_conv.json]
      [--compile-json BENCH_compile.json]
+     [--serving-json BENCH_serving.json]
 """
 
 from __future__ import annotations
@@ -24,10 +27,11 @@ import numpy as np
 _ROWS: dict = {}
 _CONV_KEYS: list = []
 _COMPILE_KEYS: list = []
+_SERVING_KEYS: list = []
 
 
 def _emit(name: str, us: float, derived: str = "", conv: bool = False,
-          comp: bool = False) -> None:
+          comp: bool = False, serv: bool = False) -> None:
     """One result row: CSV to stdout + recorded for the JSON dump(s)."""
     print(f"{name},{us:.0f},{derived}")
     _ROWS[name] = {"us_per_call": round(float(us), 1), "derived": derived}
@@ -35,6 +39,8 @@ def _emit(name: str, us: float, derived: str = "", conv: bool = False,
         _CONV_KEYS.append(name)
     if comp:
         _COMPILE_KEYS.append(name)
+    if serv:
+        _SERVING_KEYS.append(name)
 
 
 def _time_us(fn, n=5, warmup=1, repeat=3):
@@ -512,6 +518,103 @@ def bench_quantized_lm_serve():
           f"{ntok/dt:.1f} tok/s (smoke cfg, CPU)")
 
 
+def _serving_bench_graph():
+    """Small two-serial-layer CNN: cheap to compile at several precisions,
+    still exercises the packed conv + gemm serving kernels."""
+    from repro.compiler import Graph, Node
+    rng = np.random.RandomState(0)
+    g = Graph(
+        "serving_cnn", {"x": (None, 8, 8, 8)}, ["y"],
+        [Node("c1", "conv2d", ["x", "c1.w"], "c1.y",
+              {"stride": 1, "padding": 1}),
+         Node("c1.relu", "relu", ["c1.y"], "c1.r"),
+         Node("gap", "global_avg_pool", ["c1.r"], "pooled"),
+         Node("fc", "gemm", ["pooled", "fc.w"], "y")],
+        {"c1.w": (rng.randn(3, 3, 8, 16) * 0.2).astype(np.float32),
+         "fc.w": (rng.randn(16, 10) * 0.2).astype(np.float32)})
+    calib = rng.rand(4, 8, 8, 8).astype(np.float32)
+    return g, calib
+
+
+def bench_serving():
+    """Multi-tenant serving runtime vs the seed behavior it replaces.
+
+    Workload: a mixed stream — the same CNN at W2A2 and W4A8, client
+    batches of every size 1..12 (each precision sees every size once).
+    Baseline = the pre-serving ``CNNServer.classify`` discipline: direct
+    jitted Program calls, so every previously-unseen (precision, batch
+    shape) pays a trace+compile in-window. Bucketed = the serving runtime
+    post-warmup: per-example submit through the dynamic batcher, padded to
+    power-of-two buckets, jit-cache closed over {variant} x {bucket} —
+    steady state never recompiles (asserted from the cache counters).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.models.layers import QuantPolicy
+    from repro.serving import InferenceService, ModelRegistry
+    g, calib = _serving_bench_graph()
+    reg = ModelRegistry(backend="xla")
+    k_lo = reg.register_graph("cnn", g, calib, QuantPolicy(
+        mode="serial", w_bits=2, a_bits=2, radix_bits=7))
+    k_hi = reg.register_graph("cnn", g, calib, QuantPolicy(
+        mode="serial", w_bits=4, a_bits=8, radix_bits=7))
+    rng = np.random.RandomState(1)
+    sizes = list(range(1, 13))
+    client = [((k_lo, k_hi)[i % 2], rng.rand(s, 8, 8, 8).astype(np.float32))
+              for i, s in enumerate(sizes + sizes)]
+    nreq = sum(x.shape[0] for _, x in client)
+
+    # ---- baseline: re-jit per shape (the seed CNNServer.classify path)
+    progs = {k: reg.program(k) for k in (k_lo, k_hi)}
+    for p in progs.values():
+        p._jit_cache.clear()              # a fresh server facing the stream
+    t0 = time.time()
+    for k, x in client:
+        jax.block_until_ready(progs[k](jnp.asarray(x)))
+    dt_base = time.time() - t0
+    _emit("bench_serving_rejit_baseline", dt_base / nreq * 1e6,
+          f"{nreq/dt_base:.1f} req/s over {nreq} reqs; "
+          f"{len(sizes)} shapes x 2 precisions each trace+compile",
+          serv=True)
+
+    # ---- serving runtime: same stream, per-example submit, buckets
+    svc = InferenceService(reg, max_batch=16, max_wait_s=0.001)
+    with svc:
+        n_warm = svc.warmup()
+        warm = {k: v["compiles"]
+                for k, v in svc.metrics()["bucket_caches"].items()}
+        t0 = time.time()
+        futs = []
+        for k, x in client:
+            futs += svc.submit_many(k, list(x))
+        svc.drain()
+        dt_svc = time.time() - t0
+        for f in futs:
+            f.result()
+        m = svc.metrics()
+    recompiles = sum(v["compiles"] - warm[k]
+                     for k, v in m["bucket_caches"].items())
+    _emit("bench_serving_bucketed", dt_svc / nreq * 1e6,
+          f"{nreq/dt_svc:.1f} req/s steady-state; "
+          f"p50 {m['latency_p50_ms']:.1f}ms p99 {m['latency_p99_ms']:.1f}ms; "
+          f"recompiles_after_warmup={recompiles} "
+          f"({n_warm} bucket compiles at warmup)", serv=True)
+    _emit("bench_serving_speedup", 0,
+          f"{dt_base/dt_svc:.2f}x vs re-jit-per-shape baseline "
+          f"(>=2x required)", serv=True)
+    sched = m["scheduler"]
+    _emit("bench_serving_precision_mix", 0,
+          f"W2A2+W4A8 co-scheduled on {len(sched['slot_utilization'])} "
+          f"virtual MVU slots; mean busy-slot utilization "
+          f"{sched['mean_busy_utilization']:.3f}; "
+          f"{sched['admitted_batches']} batches "
+          f"{sched['admitted_requests']} reqs "
+          f"{sched['virtual_cycles']} virtual cycles", serv=True)
+    _emit("bench_serving_queue", 0,
+          f"peak depth {m['peak_queue_depth']}; "
+          f"straggler events {m['straggler']['events']}", serv=True)
+
+
 def roofline_summary():
     """Summary of the dry-run roofline table (details in EXPERIMENTS.md)."""
     try:
@@ -543,6 +646,7 @@ GROUPS = {
     "conv": [bench_conv_layers, bench_conv_pallas_kernel, bench_resnet9_e2e],
     "compile": [bench_compile_resnet9, bench_compile_dispatch],
     "serve": [bench_quantized_lm_serve],
+    "serving": [bench_serving],
     "roofline": [roofline_summary],
 }
 
@@ -560,6 +664,9 @@ def main(argv=None) -> None:
                          "('' disables)")
     ap.add_argument("--compile-json", default="BENCH_compile.json",
                     help="path for the graph-compiler rows dump "
+                         "('' disables)")
+    ap.add_argument("--serving-json", default="BENCH_serving.json",
+                    help="path for the serving-runtime rows dump "
                          "('' disables)")
     args = ap.parse_args(argv)
     groups = list(GROUPS) if not args.only else [
@@ -586,6 +693,11 @@ def main(argv=None) -> None:
         with open(args.compile_json, "w") as f:
             json.dump(comp_rows, f, indent=1, sort_keys=True)
         print(f"# wrote {len(comp_rows)} rows to {args.compile_json}")
+    if args.serving_json and _SERVING_KEYS:
+        serv_rows = {k: _ROWS[k] for k in _SERVING_KEYS}
+        with open(args.serving_json, "w") as f:
+            json.dump(serv_rows, f, indent=1, sort_keys=True)
+        print(f"# wrote {len(serv_rows)} rows to {args.serving_json}")
 
 
 if __name__ == "__main__":

@@ -15,7 +15,7 @@ choices baked in at compile time are forwarded to the Pallas dispatch.
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional, Set
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +25,8 @@ from repro.core.quant import QuantSpec, quantize_int
 from repro.kernels.ops import (pack_activations, serial_conv2d_packed_op,
                                serial_matmul_packed_op)
 
-__all__ = ["make_runner"]
+__all__ = ["make_runner", "bucket_sizes", "bucket_for",
+           "BucketedRunner", "make_bucketed_runner"]
 
 
 def _requant_spec(attrs) -> Optional[QuantSpec]:
@@ -141,3 +142,105 @@ def make_runner(program, *, backend: Optional[str] = None,
         return env[output_name]
 
     return run
+
+
+# --------------------------------------------------------------------------
+# batch-bucket entry points (the serving runtime's jit-cache discipline)
+# --------------------------------------------------------------------------
+
+def bucket_sizes(max_batch: int) -> List[int]:
+    """Padding buckets: powers of two up to (and always including)
+    ``max_batch`` — the closed set of batch shapes serving ever compiles."""
+    if max_batch < 1:
+        raise ValueError("max_batch must be >= 1")
+    sizes, b = [], 1
+    while b < max_batch:
+        sizes.append(b)
+        b *= 2
+    sizes.append(max_batch)
+    return sizes
+
+
+def bucket_for(n: int, max_batch: int) -> int:
+    """Smallest bucket holding ``n`` examples."""
+    for b in bucket_sizes(max_batch):
+        if n <= b:
+            return b
+    raise ValueError(f"batch {n} exceeds max_batch={max_batch}")
+
+
+class BucketedRunner:
+    """Jit-cached Program caller with padding buckets.
+
+    A bare ``Program.__call__`` retraces on every new batch shape; under
+    traffic with arbitrary batch sizes that is a recompile per size. The
+    bucketed runner pads each batch with zero rows up to the next
+    power-of-two bucket, so the set of compiled shapes is closed
+    (``bucket_sizes(max_batch)``) and steady-state traffic never
+    recompiles. Per-example outputs are unchanged: every lowered step is
+    example-independent (convs/gemms act per row, the activation
+    quantizers use calibration-time constants), so padding rows cannot
+    leak into real rows — asserted bit-exactly by the serving soak test.
+
+    ``compiles``/``hits`` count bucket-cache misses/hits: a miss is
+    exactly one XLA compile (the jit function is private to this runner,
+    so a first-seen bucket shape is a first-seen jit shape).
+    """
+
+    def __init__(self, program, *, max_batch: int = 32,
+                 backend: Optional[str] = None,
+                 interpret: Optional[bool] = None):
+        import threading
+        self.program = program
+        self.max_batch = max_batch
+        self._fn = jax.jit(make_runner(program, backend=backend,
+                                       interpret=interpret))
+        self._seen: Set[int] = set()
+        # counters mutate on the serving worker while metrics() snapshots
+        # them from user threads
+        self._lock = threading.Lock()
+        self.compiles = 0
+        self.hits = 0
+
+    def __call__(self, x):
+        x = jnp.asarray(x)
+        n = x.shape[0]
+        b = bucket_for(n, self.max_batch)
+        if b != n:
+            pad = jnp.zeros((b - n,) + x.shape[1:], x.dtype)
+            x = jnp.concatenate([x, pad], axis=0)
+        with self._lock:
+            if b in self._seen:
+                self.hits += 1
+            else:
+                self._seen.add(b)
+                self.compiles += 1
+        return self._fn(self.program.params, x)[:n]
+
+    def warmup(self, example_shape=None) -> int:
+        """Compile every bucket ahead of traffic; returns compile count."""
+        shape = (tuple(example_shape) if example_shape is not None
+                 else self.program.meta.get("input_shape"))
+        if shape is None:
+            raise ValueError("program has no recorded input_shape — pass "
+                             "example_shape explicitly")
+        before = self.compiles
+        for b in bucket_sizes(self.max_batch):
+            if b not in self._seen:
+                jax.block_until_ready(
+                    self(jnp.zeros((b,) + shape, jnp.float32)))
+        return self.compiles - before
+
+    def stats(self) -> Dict:
+        with self._lock:
+            return {"compiles": self.compiles, "hits": self.hits,
+                    "buckets": sorted(self._seen),
+                    "bucket_set": bucket_sizes(self.max_batch)}
+
+
+def make_bucketed_runner(program, *, max_batch: int = 32,
+                         backend: Optional[str] = None,
+                         interpret: Optional[bool] = None) -> BucketedRunner:
+    """The serving entry point: ``runner(x) -> y`` over padding buckets."""
+    return BucketedRunner(program, max_batch=max_batch, backend=backend,
+                          interpret=interpret)

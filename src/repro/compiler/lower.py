@@ -380,7 +380,10 @@ def compile_graph(g: Graph, calib, *,
     params: Dict[str, Dict] = {}
     cost_nodes: List = []
     per_layer_bits: Dict[str, Tuple[int, int]] = {}
-    meta: Dict = {"tiles": {}, "formats": {}}
+    meta: Dict = {"tiles": {}, "formats": {},
+                  # per-example input shape: the serving runtime's bucketed
+                  # runner warms its padding buckets from this
+                  "input_shape": tuple(int(d) for d in calib.shape[1:])}
     # tensor -> ("float",) | ("codes"|"packed", alpha_key, bits, signed)
     fmt: Dict[str, Tuple] = {input_name: ("float",)}
 

@@ -12,6 +12,14 @@ CNN archs (``family == "cnn"``) serve through :class:`CNNServer`, whose
 default path is the **graph compiler** (`repro.compiler`): model → IR →
 passes → packed Program — the hand-written ``resnet9_forward_packed`` is
 kept only as the golden reference the compiled path is tested against.
+
+Both servers are now thin wrappers over the multi-tenant serving runtime
+(:mod:`repro.serving`): ``CNNServer`` registers its compiled Program in a
+:class:`~repro.serving.ModelRegistry` and classifies through the
+dynamic-batching :class:`~repro.serving.InferenceService` (padding-bucket
+jit cache — no re-jit per batch shape); :func:`make_lm_engine` adapts a
+:class:`Server` so autoregressive generation serves through the same
+``submit``/``drain`` front end.
 """
 
 from __future__ import annotations
@@ -29,7 +37,7 @@ from repro.configs import get_arch
 from repro.models.transformer import (ModelConfig, decode_step, init_params,
                                       pack_params, prefill, serve_policy)
 
-__all__ = ["Server", "GenRequest", "CNNServer"]
+__all__ = ["Server", "GenRequest", "CNNServer", "make_lm_engine"]
 
 
 @dataclasses.dataclass
@@ -72,7 +80,21 @@ class Server:
         the end, instead of a per-token ``int()`` sync every step (which
         serialized the whole loop on dispatch latency).
         """
-        assert len(requests) <= self.batch_slots
+        if not requests:
+            raise ValueError("generate() needs at least one request")
+        if len(requests) > self.batch_slots:
+            raise ValueError(f"{len(requests)} requests exceed "
+                             f"batch_slots={self.batch_slots} — use "
+                             "make_lm_engine / the serving runtime to "
+                             "queue larger loads")
+        too_long = [(i, len(r.prompt)) for i, r in enumerate(requests)
+                    if len(r.prompt) > self.max_len]
+        if too_long:
+            raise ValueError(
+                f"prompt(s) longer than max_len={self.max_len}: "
+                + ", ".join(f"request {i} has {n} tokens"
+                            for i, n in too_long))
+        n_real = len(requests)
         while len(requests) < self.batch_slots:  # pad with dummies
             requests = requests + [GenRequest(requests[0].prompt, 0)]
         s = max(len(r.prompt) for r in requests)
@@ -95,7 +117,27 @@ class Server:
             all_toks = np.zeros((len(requests), 0), np.int32)
         for i, r in enumerate(requests):
             r.out_tokens = [int(v) for v in all_toks[i, :r.max_new_tokens]]
-        return requests
+        return requests[:n_real]  # dummies pad the batch; don't return them
+
+
+def make_lm_engine(server: "Server"):
+    """Adapt a :class:`Server` to the serving runtime's engine contract:
+    ``fn(requests) -> results``, one result per request, in order.
+
+    Register with
+    :meth:`repro.serving.ModelRegistry.register_callable` (pass
+    ``max_batch=server.batch_slots`` so the batcher respects the slot
+    count); every payload must be a :class:`GenRequest`. Loads larger
+    than one slot batch are served in consecutive slot-sized chunks.
+    """
+
+    def engine(requests: List[GenRequest]) -> List[GenRequest]:
+        out: List[GenRequest] = []
+        for i in range(0, len(requests), server.batch_slots):
+            out.extend(server.generate(requests[i:i + server.batch_slots]))
+        return out
+
+    return engine
 
 
 class CNNServer:
@@ -104,18 +146,22 @@ class CNNServer:
     ``graph``: a compiler IR graph (default: ResNet9 from random init —
     pass a real one from :func:`repro.models.resnet.resnet9_graph` or an
     importer). The graph is compiled once (passes + calibration + AOT
-    weight packing + tile autotuning); serving jit-runs the Program.
-    ``classify`` accepts any batch size — the Program re-jits per batch
-    shape, weights stay packed.
+    weight packing + tile autotuning) and registered in a
+    :class:`~repro.serving.ModelRegistry`; ``classify`` goes through the
+    dynamic-batching :class:`~repro.serving.InferenceService`, so any
+    batch size is served out of the power-of-two padding-bucket jit cache
+    instead of re-jitting per shape. The service worker is a daemon
+    thread; ``close()`` (or use as a context manager) stops it.
     """
 
     def __init__(self, graph=None, *, calib=None, seed: int = 0,
                  calib_batch: int = 8, backend: str = "xla",
-                 interpret: bool = False, policy=None):
-        from repro.compiler import compile_graph
+                 interpret: bool = False, policy=None, max_batch: int = 32,
+                 max_wait_s: float = 0.0):
         from repro.models.layers import QuantPolicy
         from repro.models.resnet import (ResNet9Config, resnet9_graph,
                                          resnet9_init)
+        from repro.serving import InferenceService, ModelRegistry
         if graph is None:
             cfg = ResNet9Config()
             params = resnet9_init(jax.random.PRNGKey(seed), cfg)
@@ -124,23 +170,51 @@ class CNNServer:
                 policy = QuantPolicy(mode="serial", w_bits=cfg.w_bits,
                                      a_bits=cfg.a_bits,
                                      radix_bits=cfg.radix_bits)
+        if policy is None:
+            policy = QuantPolicy(mode="serial", w_bits=2, a_bits=2,
+                                 radix_bits=7)
         if calib is None:
             in_shape = next(iter(graph.inputs.values()))
             calib = jax.random.uniform(
                 jax.random.PRNGKey(seed + 1),
                 (calib_batch,) + tuple(int(d) for d in in_shape[1:]))
         self.graph = graph
-        self.program = compile_graph(graph, calib, policy=policy,
-                                     backend=backend, interpret=interpret)
+        self.registry = ModelRegistry(backend=backend, interpret=interpret)
+        self.key = self.registry.register_graph(graph.name or "cnn", graph,
+                                                calib, policy)
+        self.service = InferenceService(
+            self.registry, max_batch=max_batch, max_wait_s=max_wait_s)
+        self.service.start()
+
+    @property
+    def program(self):
+        """The compiled Program (lazy — first access compiles)."""
+        return self.registry.program(self.key)
 
     def classify(self, images) -> np.ndarray:
-        """Logits for a batch of images (NHWC float)."""
-        return np.asarray(self.program(jnp.asarray(images)))
+        """Logits for a batch of images (NHWC float): per-image requests
+        through the service, re-assembled in order."""
+        futures = self.service.submit_many(self.key, list(np.asarray(images)))
+        return np.stack([f.result() for f in futures])
+
+    def metrics(self) -> dict:
+        """The serving runtime's metrics snapshot (latency percentiles,
+        bucket-cache counters, slot utilization, straggler events)."""
+        return self.service.metrics()
 
     def cycle_report(self, mode: str = "pipelined") -> str:
         """Accelerator cycle estimate of the compiled model (paper §3.3)."""
         cs = self.program.to_command_stream(mode=mode)
         return cs.summary()
+
+    def close(self) -> None:
+        self.service.stop()
+
+    def __enter__(self) -> "CNNServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 def _main_cnn(args, cfg) -> None:
@@ -164,7 +238,12 @@ def _main_cnn(args, cfg) -> None:
           f"({len(logits)/dt:.1f} img/s, compiled path, "
           f"backend={backend})")
     print("sample logits:", logits[0, :4])
+    m = server.metrics()
+    print(f"serving: p50={m['latency_p50_ms']}ms "
+          f"p99={m['latency_p99_ms']}ms "
+          f"bucket_caches={m['bucket_caches']}")
     print(server.cycle_report())
+    server.close()
 
 
 def main():

@@ -31,6 +31,10 @@ class SimReport:
     per_job_start: List[int]
     per_job_end: List[int]
     per_mvu_busy: List[int]
+    # busy-until cycle of each hart after this stream: feed back into the
+    # next ``simulate`` call so consecutive streams share the fabric (the
+    # serving scheduler's admission clock)
+    hart_free: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def utilization(self) -> float:
@@ -56,12 +60,26 @@ class BarrelController:
 
     # ------------------------------------------------------------------ sim
     def simulate(self, stream: CommandStream,
-                 xfer_cycles_per_job: int = 64) -> SimReport:
+                 xfer_cycles_per_job: int = 64, *,
+                 hart_free: Optional[List[int]] = None,
+                 cycle_scale: int = 1) -> SimReport:
+        """Discrete-event simulation of one stream.
+
+        ``hart_free`` seeds each hart's busy-until cycle (default: an idle
+        fabric) — pass the previous report's ``hart_free`` to co-schedule
+        consecutive streams on the shared MVUs, which is how the serving
+        scheduler admits mixed-precision batches. ``cycle_scale``
+        multiplies every job duration (a command stream costs one input;
+        MVU work scales linearly with batch size).
+        """
         jobs = stream.jobs
         n = len(jobs)
         start = [0] * n
         end = [0] * n
-        hart_free = [0] * self.harts
+        hart_free = ([0] * self.harts if hart_free is None
+                     else list(hart_free))
+        if len(hart_free) != self.harts:
+            raise ValueError(f"hart_free must have {self.harts} entries")
         busy = [0] * self.harts
         for i, job in enumerate(jobs):
             dep_ready = max((end[d] for d in job.depends_on), default=0)
@@ -71,14 +89,15 @@ class BarrelController:
                 continue
             h = job.mvu % self.harts
             t0 = max(dep_ready, hart_free[h]) + self.issue_overhead
-            dur = job.cycles if job.op != OpKind.XFER else xfer_cycles_per_job
+            dur = (job.cycles if job.op != OpKind.XFER
+                   else xfer_cycles_per_job) * cycle_scale
             start[i] = t0
             end[i] = t0 + dur
             hart_free[h] = end[i]
             busy[h] += dur
         return SimReport(makespan_cycles=max(end, default=0),
                          per_job_start=start, per_job_end=end,
-                         per_mvu_busy=busy)
+                         per_mvu_busy=busy, hart_free=hart_free)
 
     # ------------------------------------------------------------- real exec
     def register(self, op: OpKind, fn: Callable) -> None:

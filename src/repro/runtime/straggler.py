@@ -41,12 +41,14 @@ class StragglerDetector:
         self.persistent_n = persistent_n
         self.times: Deque[float] = collections.deque(maxlen=window)
         self.events: List[StragglerEvent] = []
+        self.observed = 0          # total samples fed (window is bounded)
         self._consecutive = 0
         self.on_rebalance: Optional[Callable[[StragglerEvent], None]] = None
         self.on_exclude: Optional[Callable[[StragglerEvent], None]] = None
 
     def observe(self, step: int, duration: float) -> Optional[StragglerEvent]:
         """Feed one step duration; returns an event if flagged."""
+        self.observed += 1
         if len(self.times) >= 8:
             arr = np.asarray(self.times)
             med = float(np.median(arr))
@@ -67,6 +69,23 @@ class StragglerDetector:
         self._consecutive = 0
         self.times.append(duration)
         return None
+
+    def snapshot(self) -> dict:
+        """Metrics view of the detector (serving/training dashboards):
+        baseline window state + the flagged-anomaly history."""
+        med = float(np.median(np.asarray(self.times))) if self.times else 0.0
+        last = self.events[-1] if self.events else None
+        return {
+            "observed": self.observed,
+            "median_s": round(med, 6),
+            "events": len(self.events),
+            "consecutive": self._consecutive,
+            "last_event": None if last is None else {
+                "step": last.step,
+                "duration_s": round(last.duration, 6),
+                "severity": round(last.severity, 3),
+            },
+        }
 
 
 class StepTimer:

@@ -1,0 +1,26 @@
+"""Multi-tenant serving runtime (registry → batcher → scheduler → service).
+
+The deployment layer over the graph compiler: many compiled Programs —
+the same model at several precisions, or different models — served
+concurrently from one process, the way the paper's runtime-programmable
+fabric runs mixed-precision networks without reconfiguration.
+
+* :mod:`repro.serving.registry`  — model/precision registry: lazy compile,
+  LRU eviction, content-addressed packed-weight sharing.
+* :mod:`repro.serving.batcher`   — request queue + dynamic micro-batcher
+  with power-of-two padding buckets and backpressure.
+* :mod:`repro.serving.scheduler` — MVU-slot admission in the cycle domain
+  (cost model + BarrelController simulation, per-slot utilization).
+* :mod:`repro.serving.service`   — the thread-driven front end:
+  ``submit`` / ``submit_many`` / ``drain`` + the metrics snapshot.
+"""
+
+from repro.serving.batcher import (DynamicBatcher, MicroBatch, QueueFull,
+                                   Request)
+from repro.serving.registry import ModelKey, ModelRegistry, precision_label
+from repro.serving.scheduler import Admission, SlotScheduler
+from repro.serving.service import InferenceService
+
+__all__ = ["ModelKey", "ModelRegistry", "precision_label", "DynamicBatcher",
+           "MicroBatch", "Request", "QueueFull", "SlotScheduler",
+           "Admission", "InferenceService"]

@@ -1,0 +1,243 @@
+"""Model registry: many compiled :class:`~repro.compiler.lower.Program`s
+behind stable (model, precision) keys.
+
+The paper's headline is run-time programmability: the SAME fabric serves
+DNNs at several quantization levels without reconfiguration. The registry
+is the software analogue — one model graph registered once, materialized
+lazily at any number of :class:`~repro.models.layers.QuantPolicy`
+precisions, with:
+
+* **lazy compile** — ``register_graph`` stores the recipe (graph + calib +
+  policy); ``compile_graph`` runs on first :meth:`get` and the Program is
+  cached;
+* **packed-weight sharing** — bit-transposed weight planes depend only on
+  the float weights and the weight quantizer ``(w_bits, w_signed)``, *not*
+  on the activation precision, so W2A2 and W2A8 variants of one model hold
+  the same ``w_packed`` arrays. Sharing is content-addressed (digest of the
+  packed bytes) so it also deduplicates across models that happen to share
+  layers;
+* **LRU eviction** — at most ``max_programs`` compiled graph entries stay
+  resident; evicted ones recompile transparently on next use (pinned
+  Programs and opaque callables are never evicted).
+
+Opaque engines (e.g. the autoregressive LM server, whose serving loop is
+not a single Program call) register through :meth:`register_callable` and
+serve through the same front end (:mod:`repro.serving.service`).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import threading
+import weakref
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["ModelKey", "ModelRegistry", "precision_label"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelKey:
+    """Stable handle for one servable variant: a model at one precision."""
+
+    model: str
+    precision: str  # e.g. "W2A2"; "native" for opaque engines
+
+    def __str__(self) -> str:
+        return f"{self.model}@{self.precision}"
+
+
+def precision_label(policy) -> str:
+    """Default precision tag of a QuantPolicy: ``W{w_bits}A{a_bits}``."""
+    return f"W{policy.w_bits}A{policy.a_bits}"
+
+
+@dataclasses.dataclass
+class _Entry:
+    kind: str                       # "graph" | "program" | "callable"
+    graph: object = None            # graph entries: the compile recipe
+    calib: object = None
+    policy: object = None
+    per_layer: Optional[Dict] = None
+    backend: Optional[str] = None
+    interpret: Optional[bool] = None
+    program: object = None          # program entries: pinned Program
+    fn: Optional[Callable] = None   # callable entries: opaque batch engine
+    stream: object = None           # optional CommandStream for scheduling
+    max_batch: Optional[int] = None  # per-entry cap (callable engines)
+
+
+class ModelRegistry:
+    """Registry of servable model variants (see module docstring).
+
+    ``backend``/``interpret`` are the default kernel dispatch for graph
+    compiles (overridable per registration). Thread-safe: the serving
+    worker and user threads may call :meth:`get` concurrently.
+    """
+
+    def __init__(self, *, max_programs: Optional[int] = None,
+                 backend: str = "xla", interpret: bool = False):
+        self.backend = backend
+        self.interpret = interpret
+        self.max_programs = max_programs
+        self._entries: Dict[ModelKey, _Entry] = {}
+        # compiled graph-entry Programs only, LRU order (pinned Programs
+        # live in their _Entry and never evict)
+        self._lru: "collections.OrderedDict[ModelKey, object]" = \
+            collections.OrderedDict()
+        # weak values: a plane shared only by evicted Programs must not be
+        # kept alive by the dedup cache itself
+        self._pack_cache: "weakref.WeakValueDictionary[str, object]" = \
+            weakref.WeakValueDictionary()
+        self._lock = threading.RLock()
+        self.compiles = 0
+        self.evictions = 0
+        self.shared_arrays = 0
+        self.shared_bytes = 0
+
+    # -------------------------------------------------------- registration
+    def register_graph(self, model: str, graph, calib, policy, *,
+                       precision: Optional[str] = None,
+                       per_layer: Optional[Dict] = None,
+                       backend: Optional[str] = None,
+                       interpret: Optional[bool] = None) -> ModelKey:
+        """Register a compile recipe; compilation is deferred to first use.
+
+        The same ``graph`` object may be registered under several policies
+        — variants whose layers quantize weights identically share the
+        packed planes on device.
+        """
+        key = ModelKey(model, precision or precision_label(policy))
+        with self._lock:
+            self._check_new(key)
+            self._entries[key] = _Entry(
+                "graph", graph=graph, calib=calib, policy=policy,
+                per_layer=per_layer,
+                backend=self.backend if backend is None else backend,
+                interpret=self.interpret if interpret is None else interpret)
+        return key
+
+    def register_program(self, model: str, program, *,
+                         precision: str) -> ModelKey:
+        """Register an already-compiled Program (pinned: never evicted)."""
+        key = ModelKey(model, precision)
+        with self._lock:
+            self._check_new(key)
+            self._share_packed(program)
+            self._entries[key] = _Entry("program", program=program)
+        return key
+
+    def register_callable(self, model: str, fn: Callable, *,
+                          precision: str = "native", stream=None,
+                          max_batch: Optional[int] = None) -> ModelKey:
+        """Register an opaque batch engine: ``fn(requests) -> results``
+        (one result per request, in order). ``stream``: an optional
+        :class:`~repro.core.codegen.CommandStream` so the slot scheduler
+        can cost it; without one the engine serves unscheduled."""
+        key = ModelKey(model, precision)
+        with self._lock:
+            self._check_new(key)
+            self._entries[key] = _Entry("callable", fn=fn, stream=stream,
+                                        max_batch=max_batch)
+        return key
+
+    def _check_new(self, key: ModelKey) -> None:
+        if key in self._entries:
+            raise ValueError(f"{key} is already registered")
+
+    # --------------------------------------------------------------- lookup
+    def entry(self, key: ModelKey) -> _Entry:
+        try:
+            return self._entries[key]
+        except KeyError:
+            raise KeyError(f"unknown model variant {key} — registered: "
+                           f"{[str(k) for k in self._entries]}") from None
+
+    def program(self, key: ModelKey):
+        """The compiled Program for ``key`` (lazy compile + LRU touch)."""
+        with self._lock:
+            e = self.entry(key)
+            if e.kind == "program":
+                return e.program
+            if e.kind != "graph":
+                raise TypeError(f"{key} is an opaque engine, not a Program")
+            prog = self._lru.get(key)
+            if prog is not None:
+                self._lru.move_to_end(key)
+                return prog
+            from repro.compiler import compile_graph
+            prog = compile_graph(e.graph, e.calib, policy=e.policy,
+                                 per_layer=e.per_layer, backend=e.backend,
+                                 interpret=e.interpret)
+            self.compiles += 1
+            self._share_packed(prog)
+            self._lru[key] = prog
+            while (self.max_programs is not None
+                   and len(self._lru) > self.max_programs):
+                self._lru.popitem(last=False)
+                self.evictions += 1
+            return prog
+
+    def resident_program(self, key: ModelKey):
+        """The cached Program if (and only if) resident — never compiles.
+
+        Serving holds per-variant runner state keyed on Program identity;
+        this is how it notices an eviction and releases its own reference
+        instead of pinning the evicted Program forever.
+        """
+        with self._lock:
+            e = self.entry(key)
+            return e.program if e.kind == "program" else self._lru.get(key)
+
+    def keys(self) -> List[ModelKey]:
+        return list(self._entries)
+
+    def variants(self, model: str) -> List[ModelKey]:
+        """All registered precisions of one model."""
+        return [k for k in self._entries if k.model == model]
+
+    # ------------------------------------------------------- weight sharing
+    def _share_packed(self, program) -> None:
+        """Content-addressed dedup of AOT-packed weight planes.
+
+        Packed planes are a pure function of (float weights, w_bits,
+        w_signed) — activation precision never enters — so the digest of
+        the packed bytes is a sound sharing key across precisions/models.
+        """
+        params = getattr(program, "params", None)
+        if not params:
+            return
+        for p in params.values():
+            arr = p.get("w_packed")
+            if arr is None:
+                continue
+            a = np.asarray(arr)
+            digest = hashlib.sha1(
+                a.tobytes() + str((a.shape, a.dtype)).encode()).hexdigest()
+            hit = self._pack_cache.get(digest)
+            if hit is not None and hit is not arr:
+                p["w_packed"] = hit   # drop the duplicate device buffer
+                self.shared_arrays += 1
+                self.shared_bytes += a.nbytes
+            elif hit is None:
+                try:
+                    self._pack_cache[digest] = arr
+                except TypeError:   # not weakref-able: skip dedup for it
+                    pass
+
+    # -------------------------------------------------------------- metrics
+    def stats(self) -> Dict:
+        with self._lock:
+            return {
+                "entries": len(self._entries),
+                "resident_programs": len(self._lru) + sum(
+                    1 for e in self._entries.values()
+                    if e.kind == "program"),
+                "compiles": self.compiles,
+                "evictions": self.evictions,
+                "shared_arrays": self.shared_arrays,
+                "shared_bytes": self.shared_bytes,
+            }

@@ -1,0 +1,146 @@
+"""MVU-slot scheduler: admission of micro-batches onto 8 virtual PE slots.
+
+The paper's fabric has 8 MVUs, each CSR-programmable to its own precision
+(§3.1.1), and two mapping modes (§3.1.6). When several models — or the
+same model at several precisions — share the fabric, the runtime must
+decide *when* each batch's command stream may start. This scheduler keeps
+that decision in the cycle domain:
+
+* each variant's compiled Program lowers once to a
+  :class:`~repro.core.codegen.CommandStream` (cached per key);
+* admission runs :meth:`BarrelController.simulate` seeded with the current
+  per-slot busy-until clock (``hart_free``) and ``cycle_scale=batch``, so
+  a W2A2 batch books 4x fewer cycles than the same model's W4A8 batch —
+  exactly the paper's precision/throughput trade-off — and the stream's
+  job→MVU placement (pipelined or distributed) is honoured, not just an
+  aggregate cost;
+* the returned :class:`Admission` carries the virtual start/finish cycles
+  and estimated seconds; :meth:`complete` feeds back measured wall time so
+  metrics expose both the modelled and the observed picture.
+
+Utilization is per-slot busy cycles over the virtual makespan — the same
+definition as :class:`~repro.runtime.controller.SimReport.utilization`,
+extended across every admitted batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional
+
+from repro.runtime.controller import BarrelController
+from repro.serving.registry import ModelKey
+
+__all__ = ["Admission", "SlotScheduler"]
+
+
+@dataclasses.dataclass
+class Admission:
+    key: ModelKey
+    batch: int
+    start_cycle: int          # earliest cycle any of its jobs issues
+    finish_cycle: int         # virtual completion cycle
+    est_cycles: int           # finish - start (this batch's span)
+    est_seconds: float        # est_cycles at the controller clock
+
+
+class SlotScheduler:
+    def __init__(self, *, controller: Optional[BarrelController] = None,
+                 mode: str = "pipelined"):
+        self.controller = controller or BarrelController()
+        self.slots = self.controller.harts
+        self.mode = mode
+        self._lock = threading.Lock()
+        self._hart_free: List[int] = [0] * self.slots
+        self._busy: List[int] = [0] * self.slots
+        self._streams: Dict[ModelKey, object] = {}
+        self.admitted = 0
+        self.admitted_requests = 0
+        self.unscheduled = 0          # opaque engines with no stream
+        self.wall_seconds = 0.0
+
+    # --------------------------------------------------------------- stream
+    def stream_for(self, key: ModelKey, program=None, stream=None):
+        """The variant's CommandStream (lowered once, then cached)."""
+        with self._lock:
+            cs = self._streams.get(key)
+            if cs is None:
+                if stream is not None:
+                    cs = stream
+                elif program is not None:
+                    cs = program.to_command_stream(mode=self.mode)
+                else:
+                    return None
+                self._streams[key] = cs
+            return cs
+
+    # ------------------------------------------------------------ admission
+    def admit(self, key: ModelKey, batch: int, *, program=None,
+              stream=None) -> Optional[Admission]:
+        """Book ``batch`` inputs of ``key`` onto the virtual slots.
+
+        Returns ``None`` (and serves unscheduled) when the variant has no
+        command stream — opaque engines without a cost model.
+        """
+        cs = self.stream_for(key, program=program, stream=stream)
+        if cs is None:
+            with self._lock:
+                self.unscheduled += 1
+                self.admitted_requests += batch
+            return None
+        with self._lock:
+            rep = self.controller.simulate(
+                cs, hart_free=self._hart_free, cycle_scale=max(1, batch))
+            started = [s for s, j in zip(rep.per_job_start, cs.jobs)
+                       if j.mvu >= 0]
+            start = min(started, default=rep.makespan_cycles)
+            self._hart_free = rep.hart_free
+            for h in range(self.slots):
+                self._busy[h] += rep.per_mvu_busy[h]
+            self.admitted += 1
+            self.admitted_requests += batch
+            est = rep.makespan_cycles - start
+            return Admission(
+                key=key, batch=batch, start_cycle=start,
+                finish_cycle=rep.makespan_cycles, est_cycles=est,
+                est_seconds=est / self.controller.freq_hz)
+
+    def complete(self, admission: Optional[Admission],
+                 wall_seconds: float) -> None:
+        """Measured wall time feedback for one served batch."""
+        with self._lock:
+            self.wall_seconds += wall_seconds
+
+    # -------------------------------------------------------------- metrics
+    @property
+    def virtual_cycles(self) -> int:
+        """The virtual clock: cycle at which the busiest slot frees."""
+        return max(self._hart_free, default=0)
+
+    def utilization(self) -> List[float]:
+        """Per-slot busy fraction of the virtual makespan so far."""
+        span = self.virtual_cycles
+        if span == 0:
+            return [0.0] * self.slots
+        return [b / span for b in self._busy]
+
+    def metrics(self) -> Dict:
+        with self._lock:
+            span = max(self._hart_free, default=0)
+            util = ([b / span for b in self._busy] if span
+                    else [0.0] * self.slots)
+            busy = [b for b in self._busy if b > 0]
+            return {
+                "mode": self.mode,
+                "admitted_batches": self.admitted,
+                "admitted_requests": self.admitted_requests,
+                "unscheduled_batches": self.unscheduled,
+                "virtual_cycles": span,
+                "virtual_seconds": span / self.controller.freq_hz,
+                "slot_utilization": [round(u, 4) for u in util],
+                "mean_busy_utilization": (
+                    round(sum(busy) / (len(busy) * span), 4)
+                    if busy and span else 0.0),
+                "wall_seconds": round(self.wall_seconds, 6),
+            }

@@ -1,0 +1,265 @@
+"""Thread-driven serving front end: ``submit`` / ``submit_many`` / ``drain``.
+
+One worker thread pulls micro-batches from the
+:class:`~repro.serving.batcher.DynamicBatcher`, resolves the variant in the
+:class:`~repro.serving.registry.ModelRegistry`, books it on the
+:class:`~repro.serving.scheduler.SlotScheduler`, and executes:
+
+* **Program variants** run through the executor's bucketed runner
+  (:func:`repro.compiler.executor.make_bucketed_runner`) — one runner per
+  (model, precision), padding buckets per runner, so the whole service's
+  jit-cache is the closed set {variant} x {bucket} and steady-state
+  traffic never recompiles (``metrics()["bucket_caches"]`` exposes the
+  counters the soak test asserts on);
+* **callable variants** (e.g. the autoregressive LM engine) receive the
+  raw request list and return one result per request.
+
+Per-batch wall latency feeds the
+:class:`~repro.runtime.straggler.StragglerDetector`, so anomalous batches
+(GC pause, contended host, pathological input) show up in the metrics
+snapshot exactly as slow hosts do in training. Results arrive through
+``concurrent.futures.Future``s; ``drain()`` blocks until every accepted
+request has resolved.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.compiler import executor
+from repro.runtime.straggler import StragglerDetector
+from repro.serving.batcher import DynamicBatcher, MicroBatch, Request
+from repro.serving.registry import ModelKey, ModelRegistry
+from repro.serving.scheduler import SlotScheduler
+
+__all__ = ["InferenceService"]
+
+
+class InferenceService:
+    """See module docstring. Use as a context manager, or ``start()`` /
+    ``stop()`` explicitly; ``submit`` before ``start`` raises."""
+
+    def __init__(self, registry: ModelRegistry, *,
+                 batcher: Optional[DynamicBatcher] = None,
+                 scheduler: Optional[SlotScheduler] = None,
+                 straggler: Optional[StragglerDetector] = None,
+                 max_batch: int = 32, max_wait_s: float = 0.002,
+                 max_queue: int = 256,
+                 backend: Optional[str] = None,
+                 interpret: Optional[bool] = None):
+        self.registry = registry
+        self.batcher = batcher or DynamicBatcher(
+            max_batch=max_batch, max_wait_s=max_wait_s, max_queue=max_queue)
+        self.scheduler = scheduler or SlotScheduler()
+        self.straggler = straggler or StragglerDetector(window=64)
+        self.backend = backend
+        self.interpret = interpret
+        self._runners: Dict[ModelKey, executor.BucketedRunner] = {}
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._pend_lock = threading.Condition()
+        self._pending = 0
+        self._batch_seq = 0
+        # guards everything metrics() reads while the worker writes it
+        # (latency deque, runner dict, straggler window)
+        self._mlock = threading.Lock()
+        self._latencies = collections.deque(maxlen=4096)
+        self.completed = 0
+        self.failed = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "InferenceService":
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+        self.batcher.reopen()
+        self._thread = threading.Thread(target=self._loop,
+                                        name="serving-worker", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        # closing the batcher first makes shutdown race-free: submits that
+        # already passed the started check (or are blocked on a full queue)
+        # now fail inside put() and roll their pending count back, instead
+        # of enqueueing into a service whose worker is gone
+        self.batcher.close()
+        self._stop.set()
+        self._thread.join(timeout=30)
+        self._thread = None
+        n = self.batcher.flush_pending(
+            RuntimeError("service stopped with requests still queued"))
+        with self._pend_lock:
+            self._pending -= n
+            self._pend_lock.notify_all()
+
+    def __enter__(self) -> "InferenceService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------ submission
+    def submit(self, key: ModelKey, payload, *, block: bool = True,
+               timeout: Optional[float] = None) -> Future:
+        """Queue one request; returns its Future.
+
+        ``payload``: one example (no batch axis) for Program variants; any
+        engine-defined object for callable variants. With ``block=False``
+        a full queue raises :class:`~repro.serving.batcher.QueueFull`
+        instead of waiting (the backpressure boundary).
+        """
+        if self._thread is None:
+            raise RuntimeError("service is not started — use "
+                               "`with service:` or call start()")
+        self.registry.entry(key)  # fail fast on unknown variants
+        req = Request(key, payload)
+        with self._pend_lock:
+            self._pending += 1
+        try:
+            self.batcher.put(req, block=block, timeout=timeout)
+        except BaseException:
+            with self._pend_lock:
+                self._pending -= 1
+                self._pend_lock.notify_all()
+            raise
+        return req.future
+
+    def submit_many(self, key: ModelKey, payloads) -> List[Future]:
+        return [self.submit(key, p) for p in payloads]
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every accepted request has resolved."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._pend_lock:
+            while self._pending > 0:
+                wait = None if deadline is None else (
+                    deadline - time.perf_counter())
+                if wait is not None and wait <= 0:
+                    raise TimeoutError(
+                        f"{self._pending} requests still pending")
+                self._pend_lock.wait(wait)
+
+    # ------------------------------------------------------------ execution
+    def _runner_for(self, key: ModelKey) -> executor.BucketedRunner:
+        r = self._runners.get(key)
+        resident = self.registry.resident_program(key)
+        if r is not None and r.program is resident:
+            return r
+        # first use, or the registry evicted/recompiled this variant's
+        # Program: (re)build the runner so the service never pins an
+        # evicted Program, and drop runners of other evicted variants too
+        with self._mlock:
+            for k in [k for k, old in self._runners.items()
+                      if self.registry.resident_program(k) is None]:
+                del self._runners[k]
+        prog = self.registry.program(key)  # touches LRU / lazy-compiles
+        r = executor.make_bucketed_runner(
+            prog, max_batch=self.batcher.max_batch,
+            backend=self.backend, interpret=self.interpret)
+        with self._mlock:
+            self._runners[key] = r
+        return r
+
+    def warmup(self, key: Optional[ModelKey] = None) -> int:
+        """Pre-compile every padding bucket of one (or every) Program
+        variant; returns the number of compiles triggered."""
+        keys = [key] if key is not None else [
+            k for k in self.registry.keys()
+            if self.registry.entry(k).kind in ("graph", "program")]
+        n = 0
+        for k in keys:
+            if self.registry.entry(k).kind in ("graph", "program"):
+                n += self._runner_for(k).warmup()
+        return n
+
+    def _max_batch_for(self, key: ModelKey) -> Optional[int]:
+        return self.registry.entry(key).max_batch
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            mb = self.batcher.next_batch(timeout=0.05,
+                                         max_batch_for=self._max_batch_for)
+            if mb is None:
+                continue
+            self._run_batch(mb)
+
+    def _run_batch(self, mb: MicroBatch) -> None:
+        t0 = time.perf_counter()
+        try:
+            results, admission = self._execute(mb)
+        except BaseException as e:  # noqa: BLE001 — worker must survive
+            for r in mb.requests:
+                r.future.set_exception(e)
+            self.failed += len(mb.requests)
+            self._mark_done(len(mb.requests))
+            return
+        dt = time.perf_counter() - t0
+        self.scheduler.complete(admission, dt)
+        done = time.perf_counter()
+        with self._mlock:
+            self._batch_seq += 1
+            self.straggler.observe(self._batch_seq, dt)
+            for r in mb.requests:
+                self._latencies.append(done - r.t_submit)
+        for r, y in zip(mb.requests, results):
+            r.future.set_result(y)
+        self.completed += len(mb.requests)
+        self._mark_done(len(mb.requests))
+
+    def _mark_done(self, n: int) -> None:
+        with self._pend_lock:
+            self._pending -= n
+            self._pend_lock.notify_all()
+
+    def _execute(self, mb: MicroBatch):
+        entry = self.registry.entry(mb.key)
+        if entry.kind == "callable":
+            admission = self.scheduler.admit(mb.key, mb.size,
+                                             stream=entry.stream)
+            results = entry.fn([r.payload for r in mb.requests])
+            if len(results) != mb.size:
+                raise RuntimeError(
+                    f"engine {mb.key} returned {len(results)} results "
+                    f"for {mb.size} requests")
+            return results, admission
+        runner = self._runner_for(mb.key)
+        admission = self.scheduler.admit(mb.key, mb.size,
+                                         program=runner.program)
+        x = np.stack([np.asarray(r.payload) for r in mb.requests])
+        y = np.asarray(runner(x))
+        return list(y), admission
+
+    # -------------------------------------------------------------- metrics
+    def metrics(self) -> Dict:
+        with self._mlock:     # consistent snapshot vs the live worker
+            lats = sorted(self._latencies)
+            buckets = {str(k): r.stats() for k, r in self._runners.items()}
+            straggler = self.straggler.snapshot()
+
+        def pct(p):
+            if not lats:
+                return 0.0
+            return lats[min(len(lats) - 1, int(p / 100 * len(lats)))]
+
+        return {
+            "completed": self.completed,
+            "failed": self.failed,
+            "queue_depth": self.batcher.depth,
+            "peak_queue_depth": self.batcher.peak_depth,
+            "batches": self.batcher.batches,
+            "latency_p50_ms": round(pct(50) * 1e3, 3),
+            "latency_p99_ms": round(pct(99) * 1e3, 3),
+            "bucket_caches": buckets,
+            "scheduler": self.scheduler.metrics(),
+            "straggler": straggler,
+            "registry": self.registry.stats(),
+        }

@@ -1,0 +1,495 @@
+"""Serving-runtime tests: registry (lazy compile / weight sharing /
+eviction), batcher (grouping, buckets, backpressure), MVU-slot scheduler,
+bucketed executor entry points, the Server edge-case fixes, and the
+mixed-precision soak test the acceptance criteria name: >=200 interleaved
+requests across two precisions and several batch sizes, bit-exact vs
+direct Program calls, zero recompiles after warmup."""
+
+import threading
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.compiler import Graph, Node, executor
+from repro.models.layers import QuantPolicy
+from repro.serving import (DynamicBatcher, InferenceService, ModelKey,
+                           ModelRegistry, QueueFull, Request, SlotScheduler)
+
+
+# ------------------------------------------------------------ shared model
+
+def tiny_cnn_graph(seed: int = 0) -> Graph:
+    """conv(8->16, 8x8) + relu + gap + fc: small enough that a compile is
+    cheap, deep enough to hit the packed conv AND gemm serving kernels."""
+    rng = np.random.RandomState(seed)
+    return Graph(
+        "tiny_cnn", {"x": (None, 8, 8, 8)}, ["y"],
+        [Node("c1", "conv2d", ["x", "c1.w"], "c1.y",
+              {"stride": 1, "padding": 1}),
+         Node("c1.relu", "relu", ["c1.y"], "c1.r"),
+         Node("gap", "global_avg_pool", ["c1.r"], "pooled"),
+         Node("fc", "gemm", ["pooled", "fc.w"], "y")],
+        {"c1.w": (rng.randn(3, 3, 8, 16) * 0.2).astype(np.float32),
+         "fc.w": (rng.randn(16, 10) * 0.2).astype(np.float32)})
+
+
+def serial_policy(a_bits: int, w_bits: int) -> QuantPolicy:
+    return QuantPolicy(mode="serial", w_bits=w_bits, a_bits=a_bits,
+                       radix_bits=7)
+
+
+CALIB = np.random.RandomState(42).rand(4, 8, 8, 8).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def two_precision_registry():
+    """One graph at W2A2 and W2A8 (same w_bits: packed planes must share)."""
+    reg = ModelRegistry(backend="xla")
+    g = tiny_cnn_graph()
+    k_lo = reg.register_graph("tiny", g, CALIB, serial_policy(2, 2))
+    k_hi = reg.register_graph("tiny", g, CALIB, serial_policy(8, 2),
+                              precision="W2A8")
+    return reg, k_lo, k_hi
+
+
+# -------------------------------------------------------------- registry
+
+def test_registry_lazy_compile_and_sharing(two_precision_registry):
+    reg, k_lo, k_hi = two_precision_registry
+    p_lo = reg.program(k_lo)
+    p_hi = reg.program(k_hi)
+    s = reg.stats()
+    assert s["compiles"] >= 2
+    # both variants quantize weights at w_bits=2 -> identical packed planes,
+    # shared on device (content-addressed)
+    assert s["shared_arrays"] >= 2 and s["shared_bytes"] > 0
+    for name in ("c1", "fc"):
+        assert p_lo.params[name]["w_packed"] is p_hi.params[name]["w_packed"]
+    # cached: another program() is a no-op compile-wise
+    before = reg.stats()["compiles"]
+    assert reg.program(k_lo) is p_lo
+    assert reg.stats()["compiles"] == before
+
+
+def test_registry_eviction_recompiles():
+    reg = ModelRegistry(backend="xla", max_programs=1)
+    g = tiny_cnn_graph()
+    k1 = reg.register_graph("tiny", g, CALIB, serial_policy(2, 2))
+    k2 = reg.register_graph("tiny", g, CALIB, serial_policy(4, 2),
+                            precision="W2A4")
+    reg.program(k1)
+    reg.program(k2)                      # evicts k1 (LRU, capacity 1)
+    assert reg.stats()["evictions"] == 1
+    n = reg.stats()["compiles"]
+    reg.program(k1)                      # transparently recompiles
+    assert reg.stats()["compiles"] == n + 1
+
+
+def test_registry_duplicate_and_unknown():
+    reg = ModelRegistry()
+    g = tiny_cnn_graph()
+    reg.register_graph("tiny", g, CALIB, serial_policy(2, 2))
+    with pytest.raises(ValueError):
+        reg.register_graph("tiny", g, CALIB, serial_policy(2, 2))
+    with pytest.raises(KeyError):
+        reg.entry(ModelKey("nope", "W2A2"))
+    eng = reg.register_callable("eng", lambda reqs: reqs)
+    with pytest.raises(TypeError):
+        reg.program(eng)
+
+
+# -------------------------------------------------------- bucketed runner
+
+def test_bucket_sizes_and_bucket_for():
+    assert executor.bucket_sizes(8) == [1, 2, 4, 8]
+    assert executor.bucket_sizes(12) == [1, 2, 4, 8, 12]
+    assert executor.bucket_for(3, 8) == 4
+    assert executor.bucket_for(8, 8) == 8
+    assert executor.bucket_for(9, 12) == 12
+    with pytest.raises(ValueError):
+        executor.bucket_for(13, 12)
+
+
+def test_bucketed_runner_bit_exact_and_counters(two_precision_registry):
+    reg, k_lo, _ = two_precision_registry
+    prog = reg.program(k_lo)
+    runner = executor.make_bucketed_runner(prog, max_batch=8)
+    rng = np.random.RandomState(1)
+    for i, n in enumerate([3, 1, 3, 5, 8, 3]):
+        x = rng.rand(n, 8, 8, 8).astype(np.float32)
+        got = np.asarray(runner(x))
+        want = np.asarray(prog(jnp.asarray(x)))
+        np.testing.assert_array_equal(got, want)  # padding never leaks
+    st = runner.stats()
+    # buckets 4, 1, (4 hit), 8, (8 hit), (4 hit) -> 3 compiles, 3 hits
+    assert st["compiles"] == 3 and st["hits"] == 3
+    assert st["buckets"] == [1, 4, 8]
+    assert runner.warmup() == 1          # only bucket 2 left to compile
+    assert runner.stats()["buckets"] == [1, 2, 4, 8]
+
+
+# --------------------------------------------------------------- batcher
+
+def _mk_req(key, payload=0.0, t=None):
+    r = Request(key, payload)
+    if t is not None:
+        r.t_submit = t
+    return r
+
+
+def test_batcher_groups_oldest_first():
+    ka, kb = ModelKey("a", "W2A2"), ModelKey("b", "W2A2")
+    b = DynamicBatcher(max_batch=4, max_wait_s=0.0, max_queue=16)
+    b.put(_mk_req(kb, t=1.0))
+    for i in range(6):
+        b.put(_mk_req(ka, payload=i, t=2.0 + i))
+    mb = b.next_batch(timeout=0.1)
+    assert mb.key == kb and mb.size == 1       # oldest head wins
+    mb = b.next_batch(timeout=0.1)
+    assert mb.key == ka and mb.size == 4       # capped at max_batch, FIFO
+    assert [r.payload for r in mb.requests] == [0, 1, 2, 3]
+    assert b.next_batch(timeout=0.1).size == 2
+    assert b.next_batch(timeout=0.01) is None  # drained
+    assert b.depth == 0 and b.batches == 3
+
+
+def test_batcher_backpressure_and_flush():
+    k = ModelKey("a", "W2A2")
+    b = DynamicBatcher(max_batch=4, max_wait_s=0.0, max_queue=3)
+    for _ in range(3):
+        b.put(_mk_req(k))
+    with pytest.raises(QueueFull):
+        b.put(_mk_req(k), block=False)
+    with pytest.raises(QueueFull):
+        b.put(_mk_req(k), timeout=0.01)
+    assert b.flush_pending(RuntimeError("shutdown")) == 3
+    assert b.depth == 0
+
+
+def test_batcher_timeout_binds_inside_window():
+    """A long coalescing window must not override the caller's timeout."""
+    k = ModelKey("a", "W2A2")
+    b = DynamicBatcher(max_batch=8, max_wait_s=10.0, max_queue=8)
+    b.put(_mk_req(k))
+    t0 = time.perf_counter()
+    assert b.next_batch(timeout=0.05) is None
+    assert time.perf_counter() - t0 < 2.0
+    assert b.depth == 1                       # request still queued
+
+
+def test_batcher_close_rejects_puts():
+    k = ModelKey("a", "W2A2")
+    b = DynamicBatcher(max_batch=4, max_wait_s=0.0, max_queue=4)
+    b.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        b.put(_mk_req(k))
+    b.reopen()
+    b.put(_mk_req(k))
+    assert b.depth == 1
+
+
+def test_batcher_waits_out_coalescing_window():
+    k = ModelKey("a", "W2A2")
+    b = DynamicBatcher(max_batch=8, max_wait_s=0.15, max_queue=64)
+    got = {}
+
+    def consume():
+        got["mb"] = b.next_batch(timeout=2.0)
+
+    t = threading.Thread(target=consume)
+    t.start()
+    b.put(_mk_req(k))
+    time.sleep(0.03)
+    b.put(_mk_req(k))      # lands inside the window -> same micro-batch
+    t.join()
+    assert got["mb"].size == 2
+
+
+# -------------------------------------------------- controller extension
+
+def test_controller_hart_free_seed_and_cycle_scale(two_precision_registry):
+    from repro.runtime.controller import BarrelController
+    reg, k_lo, _ = two_precision_registry
+    stream = reg.program(k_lo).to_command_stream()
+    ctl = BarrelController()
+    base = ctl.simulate(stream)
+    assert len(base.hart_free) == ctl.harts
+    assert max(base.hart_free) == base.makespan_cycles
+    # seeding with the previous end shifts the whole schedule later
+    cont = ctl.simulate(stream, hart_free=base.hart_free)
+    assert cont.makespan_cycles > base.makespan_cycles
+    # batch scaling multiplies every job duration
+    scaled = ctl.simulate(stream, cycle_scale=4)
+    busy = sum(base.per_mvu_busy)
+    assert sum(scaled.per_mvu_busy) == 4 * busy
+    with pytest.raises(ValueError):
+        ctl.simulate(stream, hart_free=[0])
+
+
+# --------------------------------------------------------------- scheduler
+
+def test_scheduler_precision_scaling_and_utilization(two_precision_registry):
+    reg, k_lo, k_hi = two_precision_registry
+    sched = SlotScheduler()
+    a_lo = sched.admit(k_lo, 4, program=reg.program(k_lo))
+    a_hi = sched.admit(k_hi, 4, program=reg.program(k_hi))
+    # W2A8 books ~4x the cycles of W2A2 (a_bits*w_bits scaling, §3.1.1)
+    assert a_hi.est_cycles > 2 * a_lo.est_cycles
+    assert a_hi.start_cycle >= a_lo.start_cycle  # shared fabric: runs after
+    m = sched.metrics()
+    assert m["admitted_batches"] == 2 and m["admitted_requests"] == 8
+    assert m["virtual_cycles"] >= a_hi.finish_cycle - a_hi.start_cycle
+    assert all(0.0 <= u <= 1.0 for u in m["slot_utilization"])
+    assert 0.0 < m["mean_busy_utilization"] <= 1.0
+    # opaque engine without a stream: served but unscheduled
+    assert sched.admit(ModelKey("lm", "native"), 2) is None
+    assert sched.metrics()["unscheduled_batches"] == 1
+
+
+# --------------------------------------------------- Server edge cases
+
+def _lm_cfg():
+    from repro.models.transformer import ModelConfig
+    return ModelConfig(
+        name="edge-test", family="dense", n_layers=1, d_model=32, n_heads=2,
+        n_kv_heads=2, head_dim=16, d_ff=64, vocab_size=64, dtype="float32",
+        remat=False, policy=QuantPolicy(mode="qat", w_bits=4, a_bits=8))
+
+
+@pytest.fixture(scope="module")
+def lm_server():
+    from repro.launch.serve import Server
+    return Server(_lm_cfg(), batch_slots=2, max_len=16, seed=0)
+
+
+def test_server_generate_rejects_empty(lm_server):
+    with pytest.raises(ValueError, match="at least one request"):
+        lm_server.generate([])
+
+
+def test_server_generate_rejects_long_prompt(lm_server):
+    from repro.launch.serve import GenRequest
+    with pytest.raises(ValueError, match="longer than max_len"):
+        lm_server.generate(
+            [GenRequest(np.arange(17, dtype=np.int32), 2)])
+    # a full-length prompt is fine
+    out = lm_server.generate(
+        [GenRequest(np.arange(16, dtype=np.int32) % 64, 1)])
+    assert len(out) == 1 and len(out[0].out_tokens) == 1
+
+
+def test_server_generate_rejects_overfull_batch(lm_server):
+    from repro.launch.serve import GenRequest
+    reqs = [GenRequest(np.arange(4, dtype=np.int32), 1) for _ in range(3)]
+    with pytest.raises(ValueError, match="exceed"):
+        lm_server.generate(reqs)
+
+
+def test_server_generate_partial_batch_returns_only_real(lm_server):
+    from repro.launch.serve import GenRequest
+    out = lm_server.generate([GenRequest(np.arange(4, dtype=np.int32), 2)])
+    assert len(out) == 1               # the dummy pad request is not returned
+    assert len(out[0].out_tokens) == 2
+
+
+def test_lm_engine_unifies_behind_service(lm_server):
+    from repro.launch.serve import GenRequest, make_lm_engine
+    reg = ModelRegistry()
+    key = reg.register_callable("lm", make_lm_engine(lm_server),
+                                precision="W4A8",
+                                max_batch=lm_server.batch_slots)
+    svc = InferenceService(reg, max_batch=8, max_wait_s=0.0)
+    with svc:
+        futs = svc.submit_many(
+            key, [GenRequest(np.arange(4, dtype=np.int32), 2)
+                  for _ in range(5)])
+        svc.drain()
+        outs = [f.result().out_tokens for f in futs]
+    assert all(len(o) == 2 for o in outs)
+    assert len(set(map(tuple, outs))) == 1       # same prompt, same greedy
+    m = svc.metrics()
+    assert m["completed"] == 5
+    assert m["scheduler"]["unscheduled_batches"] >= 1  # no cost stream
+
+
+# ----------------------------------------------------------- service/soak
+
+def test_service_backpressure_raises_queuefull():
+    reg = ModelRegistry()
+    gate = threading.Event()
+
+    def slow_engine(reqs):
+        gate.wait(timeout=10)
+        return [0 for _ in reqs]
+
+    key = reg.register_callable("slow", slow_engine)
+    svc = InferenceService(reg, max_batch=1, max_wait_s=0.0, max_queue=3)
+    with svc:
+        svc.submit(key, None)
+        deadline = time.perf_counter() + 5
+        # the worker picks requests up asynchronously; keep topping the
+        # queue up non-blocking until it is full while the engine is gated
+        while time.perf_counter() < deadline:
+            try:
+                while True:
+                    svc.submit(key, None, block=False)
+            except QueueFull:
+                break
+        else:
+            pytest.fail("queue never filled")
+        with pytest.raises(QueueFull):
+            svc.submit(key, None, block=False)
+        gate.set()
+        svc.drain(timeout=30)
+    assert svc.metrics()["failed"] == 0
+
+
+def test_submit_requires_started_service(two_precision_registry):
+    reg, k_lo, _ = two_precision_registry
+    svc = InferenceService(reg)
+    with pytest.raises(RuntimeError, match="not started"):
+        svc.submit(k_lo, np.zeros((8, 8, 8), np.float32))
+
+
+def test_soak_mixed_precision_bit_exact_no_recompiles(two_precision_registry):
+    """The acceptance soak: >=200 interleaved requests across 2 precisions
+    and >=3 batch sizes through serving.service — bit-exact vs direct
+    Program execution, zero recompiles after warmup (bucket-cache
+    counters), straggler detector live, scheduler booked every batch."""
+    reg, k_lo, k_hi = two_precision_registry
+    progs = {k_lo: reg.program(k_lo), k_hi: reg.program(k_hi)}
+    svc = InferenceService(reg, max_batch=16, max_wait_s=0.05)
+    rng = np.random.RandomState(7)
+    with svc:
+        svc.warmup()                     # compile every (variant, bucket)
+        warm = {k: v["compiles"]
+                for k, v in svc.metrics()["bucket_caches"].items()}
+        assert all(c == len(executor.bucket_sizes(16)) == 5
+                   for c in warm.values())
+
+        submitted = []                   # (key, payload, future)
+        burst_sizes = [1, 3, 16, 6]      # buckets 1 / 4 / 16 / 8
+        i = 0
+        while len(submitted) < 200:
+            key = (k_lo, k_hi)[i % 2]
+            n = burst_sizes[i % len(burst_sizes)]
+            xs = [rng.rand(8, 8, 8).astype(np.float32) for _ in range(n)]
+            futs = svc.submit_many(key, xs)
+            submitted += list(zip([key] * n, xs, futs))
+            svc.drain(timeout=120)       # burst boundaries stay distinct
+            i += 1
+
+        m = svc.metrics()
+        # -------- bit-exact vs direct Program calls, request by request
+        for key, x, fut in submitted:
+            direct = np.asarray(progs[key](jnp.asarray(x[None]))[0])
+            np.testing.assert_array_equal(np.asarray(fut.result()), direct)
+        # -------- traffic shape: both precisions, >=3 distinct buckets
+        assert len(submitted) >= 200
+        used = set()
+        for k, st in m["bucket_caches"].items():
+            used.update(st["buckets"])
+        assert len(used) >= 3, used
+        assert m["completed"] >= 200 and m["failed"] == 0
+        # -------- zero recompiles after warmup
+        for k, st in m["bucket_caches"].items():
+            assert st["compiles"] == warm[k], (k, st)
+            assert st["hits"] > 0
+        # -------- scheduler booked every Program batch; metrics sane
+        sched = m["scheduler"]
+        assert sched["admitted_requests"] >= 200
+        assert sched["unscheduled_batches"] == 0
+        assert sched["virtual_cycles"] > 0
+        assert any(u > 0 for u in sched["slot_utilization"])
+        # -------- straggler detector saw every batch
+        assert m["straggler"]["observed"] == m["batches"] > 0
+
+
+def test_service_releases_evicted_programs():
+    """A served variant must not pin a Program the registry evicted: the
+    runner rebuilds against the recompiled Program and stays bit-exact."""
+    reg = ModelRegistry(backend="xla", max_programs=1)
+    g = tiny_cnn_graph()
+    k1 = reg.register_graph("tiny", g, CALIB, serial_policy(2, 2))
+    k2 = reg.register_graph("tiny", g, CALIB, serial_policy(4, 2),
+                            precision="W2A4")
+    x = np.random.RandomState(3).rand(8, 8, 8).astype(np.float32)
+    svc = InferenceService(reg, max_batch=4, max_wait_s=0.0)
+    with svc:
+        y1 = svc.submit(k1, x).result()
+        svc.submit(k2, x).result()            # evicts k1's Program
+        assert reg.stats()["evictions"] == 1
+        assert reg.resident_program(k1) is None
+        n = reg.stats()["compiles"]
+        y1_again = svc.submit(k1, x).result() # rebuild: recompile + rerun
+        assert reg.stats()["compiles"] == n + 1
+        np.testing.assert_array_equal(y1, y1_again)
+        # no runner still references a non-resident Program
+        for key, runner in svc._runners.items():
+            resident = reg.resident_program(key)
+            assert resident is None or runner.program is resident
+
+
+def test_metrics_safe_during_live_traffic():
+    """metrics() from a user thread must not crash while the worker is
+    mutating the latency/straggler/runner state."""
+    reg = ModelRegistry()
+    key = reg.register_callable("fast", lambda reqs: [0 for _ in reqs],
+                                max_batch=1)
+    errs = []
+    svc = InferenceService(reg, max_batch=1, max_wait_s=0.0)
+    with svc:
+        stop = threading.Event()
+
+        def poll():
+            while not stop.is_set():
+                try:
+                    svc.metrics()
+                except Exception as e:  # noqa: BLE001
+                    errs.append(e)
+                    return
+
+        t = threading.Thread(target=poll)
+        t.start()
+        for _ in range(300):
+            svc.submit(key, None)
+        svc.drain(timeout=60)
+        stop.set()
+        t.join()
+    assert not errs, errs
+
+
+def test_straggler_snapshot_records_events():
+    from repro.runtime.straggler import StragglerDetector
+    det = StragglerDetector(window=16)
+    for s in range(12):
+        det.observe(s, 1.0)
+    det.observe(12, 3.0)
+    snap = det.snapshot()
+    assert snap["observed"] == 13
+    assert snap["events"] == 1
+    assert snap["last_event"]["severity"] > 2.0
+    assert snap["median_s"] == pytest.approx(1.0)
+
+
+def test_service_straggler_wired(two_precision_registry):
+    """Anomalous batch latency lands in the service metrics snapshot."""
+    reg = ModelRegistry()
+    delays = iter([0.0] * 10 + [0.3] + [0.0] * 3)
+
+    def engine(reqs):
+        time.sleep(next(delays, 0.0))
+        return [0 for _ in reqs]
+
+    key = reg.register_callable("jittery", engine, max_batch=1)
+    svc = InferenceService(reg, max_batch=1, max_wait_s=0.0)
+    with svc:
+        for _ in range(14):
+            svc.submit(key, None)
+            svc.drain(timeout=30)
+        snap = svc.metrics()["straggler"]
+    assert snap["observed"] == 14
+    assert snap["events"] >= 1, snap     # the 0.3s batch was flagged
