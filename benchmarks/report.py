@@ -114,6 +114,25 @@ def serving_table(path="BENCH_serving.json"):
               "vs the seed's re-jit-per-shape serving discipline.")
 
 
+def distributed_table(path="BENCH_distributed.json"):
+    """Aggregate the bank-scaling artifact (emitted by ``benchmarks.run
+    --only distributed``) into the EXPERIMENTS.md §Distributed table;
+    silently skipped when the artifact is absent."""
+    if not os.path.exists(path):
+        return
+    rows = json.load(open(path))
+    print("\n### §Distributed — serving across a mesh of MVU banks\n")
+    print("| row | us/req | derived |")
+    print("|---|---|---|")
+    for name in sorted(rows):
+        r = rows[name]
+        print(f"| {name} | {r['us_per_call']:.0f} | {r['derived']} |")
+    sc = rows.get("bench_distributed_scaling", {}).get("derived", "")
+    if sc:
+        print(f"\nHeadline: **{sc.split(' ')[0]}** virtual-throughput "
+              "scaling from 1 to 4 banks on the mixed-precision stream.")
+
+
 def main():
     recs = load_records()
     ok = [r for r in recs if r.get("ok")]
@@ -124,6 +143,7 @@ def main():
     roofline_table(recs)
     delta_table(recs, os.path.join(ART_DIR, "..", "dryrun_baseline"))
     serving_table()
+    distributed_table()
 
 
 if __name__ == "__main__":

@@ -6,41 +6,43 @@ end-to-end rows are additionally dumped to ``BENCH_conv.json``; the graph-
 compiler rows (compiled vs hand-written packed path, executor dispatch
 overhead) to ``BENCH_compile.json``; the serving-runtime rows (bucketed
 steady-state vs re-jit-per-shape, latency percentiles, precision mix) to
-``BENCH_serving.json``.
+``BENCH_serving.json``; the bank-scaling rows (1 vs 4 MVU banks, virtual
++ wall domains, sharded/pipelined placements) to
+``BENCH_distributed.json``.
 
 Run: PYTHONPATH=src python -m benchmarks.run
-     [--only kernels,tables,conv,compile,serving]
+     [--only kernels,tables,conv,compile,serving,distributed]
      [--json BENCH_kernels.json] [--conv-json BENCH_conv.json]
      [--compile-json BENCH_compile.json]
      [--serving-json BENCH_serving.json]
+     [--distributed-json BENCH_distributed.json]
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 import timeit
 
 import numpy as np
 
 _ROWS: dict = {}
-_CONV_KEYS: list = []
-_COMPILE_KEYS: list = []
-_SERVING_KEYS: list = []
+# per-group artifact keys: group tag -> row names (dumped to the group's
+# own BENCH_*.json next to the all-rows dump)
+_GROUP_KEYS: dict = {"conv": [], "compile": [], "serving": [],
+                     "distributed": []}
 
 
-def _emit(name: str, us: float, derived: str = "", conv: bool = False,
-          comp: bool = False, serv: bool = False) -> None:
-    """One result row: CSV to stdout + recorded for the JSON dump(s)."""
+def _emit(name: str, us: float, derived: str = "",
+          group: str = None) -> None:
+    """One result row: CSV to stdout + recorded for the JSON dump(s).
+    ``group`` additionally tags the row for that group's artifact."""
     print(f"{name},{us:.0f},{derived}")
     _ROWS[name] = {"us_per_call": round(float(us), 1), "derived": derived}
-    if conv:
-        _CONV_KEYS.append(name)
-    if comp:
-        _COMPILE_KEYS.append(name)
-    if serv:
-        _SERVING_KEYS.append(name)
+    if group is not None:
+        _GROUP_KEYS[group].append(name)
 
 
 def _time_us(fn, n=5, warmup=1, repeat=3):
@@ -315,12 +317,12 @@ def bench_conv_layers():
         tot_seed += us_seed
         tot_imp += us_imp
         _emit(f"bench_conv_W2A2_{name}_seed_im2col", us_seed,
-              f"8x{hw}x{hw}x{ci}->{co} s{stride}", conv=True)
+              f"8x{hw}x{hw}x{ci}->{co} s{stride}", group="conv")
         _emit(f"bench_conv_W2A2_{name}_implicit", us_imp,
-              f"{us_seed / us_imp:.2f}x vs seed", conv=True)
+              f"{us_seed / us_imp:.2f}x vs seed", group="conv")
     _emit("bench_conv_W2A2_resnet9_stack_speedup", 0,
           f"{tot_seed / tot_imp:.2f}x vs im2col+v1 serial GEMM "
-          f"(stack {tot_seed:.0f}us -> {tot_imp:.0f}us)", conv=True)
+          f"(stack {tot_seed:.0f}us -> {tot_imp:.0f}us)", group="conv")
 
 
 def bench_conv_pallas_kernel():
@@ -367,10 +369,10 @@ def bench_conv_pallas_kernel():
     ], n=1, rounds=3)
     tag = f"{n}x{hw}x{hw}x{ci}->{co}"
     _emit(f"bench_conv_pallas_W2A2_seed_{tag}", us_v1,
-          "im2col + v1 matmul kernel, interpret", conv=True)
+          "im2col + v1 matmul kernel, interpret", group="conv")
     _emit(f"bench_conv_pallas_W2A2_v2_{tag}", us_v2,
           f"implicit-GEMM conv kernel, interpret; "
-          f"{us_v1 / us_v2:.2f}x vs seed", conv=True)
+          f"{us_v1 / us_v2:.2f}x vs seed", group="conv")
 
 
 def bench_resnet9_e2e():
@@ -407,13 +409,13 @@ def bench_resnet9_e2e():
         lambda: jax.block_until_ready(f_packed(packed, images)),
     ], n=1, rounds=3)
     _emit("bench_resnet9_W2A2_seed_forward", us_seed,
-          "per-call weight quant + f32 im2col, batch 4", conv=True)
+          "per-call weight quant + f32 im2col, batch 4", group="conv")
     _emit("bench_resnet9_W2A2_hoisted_forward", us_hoist,
           f"one-time weight quant ({us_quant:.0f}us); "
-          f"{us_seed / us_hoist:.2f}x vs seed", conv=True)
+          f"{us_seed / us_hoist:.2f}x vs seed", group="conv")
     _emit("bench_resnet9_W2A2_packed_forward", us_packed,
           f"implicit-GEMM packed chain (pack {us_pack:.0f}us one-time); "
-          f"{us_seed / us_packed:.2f}x vs seed", conv=True)
+          f"{us_seed / us_packed:.2f}x vs seed", group="conv")
 
 
 def bench_compile_resnet9():
@@ -456,22 +458,22 @@ def bench_compile_resnet9():
     exact = bool(jnp.all(prog(images) == f_hand(packed, images)))
     ratio = us_comp / us_hand
     _emit("bench_compile_resnet9_hand_packed", us_hand,
-          "resnet9_forward_packed, XLA, batch 4", comp=True)
+          "resnet9_forward_packed, XLA, batch 4", group="compile")
     _emit("bench_compile_resnet9_compiled", us_comp,
           f"graph-compiler Program; {ratio:.3f}x hand time "
-          f"(within 5%: {ratio <= 1.05}); bit_exact={exact}", comp=True)
+          f"(within 5%: {ratio <= 1.05}); bit_exact={exact}", group="compile")
     _emit("bench_compile_resnet9_hlo_cost", 0,
           f"flops/bytes hand={cost_hand} compiled={cost_comp} "
-          f"(identical: {cost_hand == cost_comp})", comp=True)
+          f"(identical: {cost_hand == cost_comp})", group="compile")
     _emit("bench_compile_resnet9_compile_time", us_compile,
-          "one-time: passes+calibration+packing+tuning+first jit", comp=True)
+          "one-time: passes+calibration+packing+tuning+first jit", group="compile")
     hand_cs = generate(resnet9_cost_layers(cfg), a_bits=cfg.a_bits,
                        w_bits=cfg.w_bits)
     comp_cs = prog.to_command_stream()
     _emit("bench_compile_resnet9_cycles", 0,
           f"per-MVU {comp_cs.per_mvu_cycles} "
           f"(matches hand codegen: "
-          f"{comp_cs.per_mvu_cycles == hand_cs.per_mvu_cycles})", comp=True)
+          f"{comp_cs.per_mvu_cycles == hand_cs.per_mvu_cycles})", group="compile")
 
 
 def bench_compile_dispatch():
@@ -494,10 +496,10 @@ def bench_compile_dispatch():
     us_jit = _time_us(lambda: jax.block_until_ready(prog(x)), n=20)
     us_eager = _time_us(lambda: jax.block_until_ready(prog.run(x)), n=5)
     _emit("bench_compile_dispatch_jit", us_jit,
-          "jitted Program call (serving path)", comp=True)
+          "jitted Program call (serving path)", group="compile")
     _emit("bench_compile_dispatch_eager", us_eager,
           f"eager step walk; jit removes {us_eager - us_jit:.0f}us/call "
-          "of dispatch", comp=True)
+          "of dispatch", group="compile")
 
 
 def bench_quantized_lm_serve():
@@ -510,9 +512,9 @@ def bench_quantized_lm_serve():
     reqs = [GenRequest(rng.randint(0, cfg.vocab_size, (8,)).astype(np.int32),
                        8) for _ in range(2)]
     server.generate(reqs)  # warmup/compile
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = server.generate(reqs)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     ntok = sum(len(r.out_tokens) for r in out)
     _emit("bench_lm_serve_W4A8", dt / max(ntok, 1) * 1e6,
           f"{ntok/dt:.1f} tok/s (smoke cfg, CPU)")
@@ -568,14 +570,14 @@ def bench_serving():
     progs = {k: reg.program(k) for k in (k_lo, k_hi)}
     for p in progs.values():
         p._jit_cache.clear()              # a fresh server facing the stream
-    t0 = time.time()
+    t0 = time.perf_counter()
     for k, x in client:
         jax.block_until_ready(progs[k](jnp.asarray(x)))
-    dt_base = time.time() - t0
+    dt_base = time.perf_counter() - t0
     _emit("bench_serving_rejit_baseline", dt_base / nreq * 1e6,
           f"{nreq/dt_base:.1f} req/s over {nreq} reqs; "
           f"{len(sizes)} shapes x 2 precisions each trace+compile",
-          serv=True)
+          group="serving")
 
     # ---- serving runtime: same stream, per-example submit, buckets
     svc = InferenceService(reg, max_batch=16, max_wait_s=0.001)
@@ -583,12 +585,12 @@ def bench_serving():
         n_warm = svc.warmup()
         warm = {k: v["compiles"]
                 for k, v in svc.metrics()["bucket_caches"].items()}
-        t0 = time.time()
+        t0 = time.perf_counter()
         futs = []
         for k, x in client:
             futs += svc.submit_many(k, list(x))
         svc.drain()
-        dt_svc = time.time() - t0
+        dt_svc = time.perf_counter() - t0
         for f in futs:
             f.result()
         m = svc.metrics()
@@ -598,10 +600,10 @@ def bench_serving():
           f"{nreq/dt_svc:.1f} req/s steady-state; "
           f"p50 {m['latency_p50_ms']:.1f}ms p99 {m['latency_p99_ms']:.1f}ms; "
           f"recompiles_after_warmup={recompiles} "
-          f"({n_warm} bucket compiles at warmup)", serv=True)
+          f"({n_warm} bucket compiles at warmup)", group="serving")
     _emit("bench_serving_speedup", 0,
           f"{dt_base/dt_svc:.2f}x vs re-jit-per-shape baseline "
-          f"(>=2x required)", serv=True)
+          f"(>=2x required)", group="serving")
     sched = m["scheduler"]
     _emit("bench_serving_precision_mix", 0,
           f"W2A2+W4A8 co-scheduled on {len(sched['slot_utilization'])} "
@@ -609,10 +611,82 @@ def bench_serving():
           f"{sched['mean_busy_utilization']:.3f}; "
           f"{sched['admitted_batches']} batches "
           f"{sched['admitted_requests']} reqs "
-          f"{sched['virtual_cycles']} virtual cycles", serv=True)
+          f"{sched['virtual_cycles']} virtual cycles", group="serving")
     _emit("bench_serving_queue", 0,
           f"peak depth {m['peak_queue_depth']}; "
-          f"straggler events {m['straggler']['events']}", serv=True)
+          f"straggler events {m['straggler']['events']}", group="serving")
+
+
+def bench_distributed():
+    """Mesh-of-MVU-banks scaling: the mixed W2A2+W4A8 serving stream at 1
+    vs 4 banks (one 8-slot bank per device).
+
+    Runs :mod:`benchmarks.distributed` in a subprocess so the worker can
+    force ``--xla_force_host_platform_device_count=8`` before jax
+    initializes. Scaling is reported in two domains: **virtual** (the
+    barrel-controller cycle clock the paper tables model — the >=2x CI
+    gate) and **wall** (this host; fake devices share the physical cores,
+    so wall scaling is informational).
+    """
+    import json as _json
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)      # worker sets its own device count
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    try:
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.distributed"],
+            capture_output=True, text=True, env=env, timeout=1200)
+    except subprocess.TimeoutExpired:
+        _emit("bench_distributed_error", 0, "worker timed out (1200s)",
+              group="distributed")
+        return
+    if out.returncode != 0:
+        _emit("bench_distributed_error", 0,
+              f"worker failed: {out.stderr[-300:]}", group="distributed")
+        return
+    try:
+        r = _json.loads(out.stdout.strip().splitlines()[-1])
+    except (IndexError, ValueError):
+        _emit("bench_distributed_error", 0,
+              f"unparseable worker output: {out.stdout[-200:]!r}",
+              group="distributed")
+        return
+    if "error" in r:
+        _emit("bench_distributed_error", 0, r["error"], group="distributed")
+        return
+    w1, w4 = r["wall"]["1"], r["wall"]["4"]
+    v1, v4 = r["virtual"]["1"], r["virtual"]["4"]
+    vscale = v1["virtual_seconds"] / v4["virtual_seconds"]
+    wscale = w4["req_s"] / w1["req_s"]
+    _emit("bench_distributed_banks1", 1e6 / w1["req_s"],
+          f"{w1['req_s']:.1f} req/s wall; "
+          f"{v1['req_per_vsec']:.0f} req/vsec virtual (8 slots); "
+          f"recompiles_after_warmup={w1['recompiles']}", group="distributed")
+    _emit("bench_distributed_banks4", 1e6 / w4["req_s"],
+          f"{w4['req_s']:.1f} req/s wall; "
+          f"{v4['req_per_vsec']:.0f} req/vsec virtual (32 slots); "
+          f"recompiles_after_warmup={w4['recompiles']}; "
+          f"bit_exact={w4['bit_exact']}; "
+          f"bank_util={w4['scheduler']['bank_utilization']}", group="distributed")
+    _emit("bench_distributed_scaling", 0,
+          f"{vscale:.2f}x virtual-throughput scaling 1->4 banks "
+          f"(modeled 8->32 MVU slots on the booked mixed W2A2+W4A8 "
+          f"stream; >=2x required); wall {wscale:.2f}x on this host "
+          f"({r['n_devices']} fake devices over {r['cpu_count']} cores)",
+          group="distributed")
+    sh = r["sharded"]
+    _emit("bench_distributed_sharded_batch", 1e6 / sh["img_s_n"],
+          f"batch {sh['batch']} sharded over 4 banks: "
+          f"{sh['img_s_n']:.0f} img/s vs {sh['img_s_1']:.0f} single-device "
+          f"({sh['img_s_n']/sh['img_s_1']:.2f}x wall); "
+          f"bit_exact={sh['bit_exact']}", group="distributed")
+    pl = r["pipelined"]
+    _emit("bench_distributed_pipeline", 1e6 / pl["img_s"],
+          f"{pl['img_s']:.0f} img/s over {len(pl['stages'])} pipeline "
+          f"stages (steps {pl['stages']}); bit_exact={pl['bit_exact']}",
+          group="distributed")
 
 
 def roofline_summary():
@@ -647,6 +721,7 @@ GROUPS = {
     "compile": [bench_compile_resnet9, bench_compile_dispatch],
     "serve": [bench_quantized_lm_serve],
     "serving": [bench_serving],
+    "distributed": [bench_distributed],
     "roofline": [roofline_summary],
 }
 
@@ -668,6 +743,9 @@ def main(argv=None) -> None:
     ap.add_argument("--serving-json", default="BENCH_serving.json",
                     help="path for the serving-runtime rows dump "
                          "('' disables)")
+    ap.add_argument("--distributed-json", default="BENCH_distributed.json",
+                    help="path for the bank-scaling rows dump "
+                         "('' disables)")
     args = ap.parse_args(argv)
     groups = list(GROUPS) if not args.only else [
         g.strip() for g in args.only.split(",") if g.strip()]
@@ -683,21 +761,17 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump(_ROWS, f, indent=1, sort_keys=True)
         print(f"# wrote {len(_ROWS)} rows to {args.json}")
-    if args.conv_json and _CONV_KEYS:
-        conv_rows = {k: _ROWS[k] for k in _CONV_KEYS}
-        with open(args.conv_json, "w") as f:
-            json.dump(conv_rows, f, indent=1, sort_keys=True)
-        print(f"# wrote {len(conv_rows)} rows to {args.conv_json}")
-    if args.compile_json and _COMPILE_KEYS:
-        comp_rows = {k: _ROWS[k] for k in _COMPILE_KEYS}
-        with open(args.compile_json, "w") as f:
-            json.dump(comp_rows, f, indent=1, sort_keys=True)
-        print(f"# wrote {len(comp_rows)} rows to {args.compile_json}")
-    if args.serving_json and _SERVING_KEYS:
-        serv_rows = {k: _ROWS[k] for k in _SERVING_KEYS}
-        with open(args.serving_json, "w") as f:
-            json.dump(serv_rows, f, indent=1, sort_keys=True)
-        print(f"# wrote {len(serv_rows)} rows to {args.serving_json}")
+    group_paths = {"conv": args.conv_json, "compile": args.compile_json,
+                   "serving": args.serving_json,
+                   "distributed": args.distributed_json}
+    for grp, path in group_paths.items():
+        keys = _GROUP_KEYS[grp]
+        if not path or not keys:
+            continue
+        rows = {k: _ROWS[k] for k in keys}
+        with open(path, "w") as f:
+            json.dump(rows, f, indent=1, sort_keys=True)
+        print(f"# wrote {len(rows)} rows to {path}")
 
 
 if __name__ == "__main__":

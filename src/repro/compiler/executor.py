@@ -114,17 +114,26 @@ _APPLY: Dict[str, Callable] = {
 
 
 def make_runner(program, *, backend: Optional[str] = None,
-                interpret: Optional[bool] = None) -> Callable:
+                interpret: Optional[bool] = None, steps=None,
+                input_name: Optional[str] = None,
+                output_name: Optional[str] = None) -> Callable:
     """Build ``run(params, x) -> output`` for one Program.
 
     The step list and attrs are static (closed over); ``params`` is the
     traced pytree, so ``jax.jit(make_runner(p))`` compiles once per
     (backend, batch shape) and weight updates never retrigger tracing.
+
+    ``steps``/``input_name``/``output_name`` override the Program's own
+    (default: the whole step list). A contiguous slice of steps plus its
+    boundary tensor names yields a *stage* runner — the building block of
+    :class:`repro.distributed.program_parallel.PipelinedProgram`, which
+    maps consecutive slices onto consecutive devices.
     """
     backend = backend or program.backend
     interpret = program.interpret if interpret is None else interpret
-    steps = program.steps
-    input_name, output_name = program.input_name, program.output_name
+    steps = program.steps if steps is None else tuple(steps)
+    input_name = program.input_name if input_name is None else input_name
+    output_name = program.output_name if output_name is None else output_name
 
     def run(params, x):
         env = {input_name: x}
@@ -148,22 +157,30 @@ def make_runner(program, *, backend: Optional[str] = None,
 # batch-bucket entry points (the serving runtime's jit-cache discipline)
 # --------------------------------------------------------------------------
 
-def bucket_sizes(max_batch: int) -> List[int]:
+def bucket_sizes(max_batch: int, multiple: int = 1) -> List[int]:
     """Padding buckets: powers of two up to (and always including)
-    ``max_batch`` — the closed set of batch shapes serving ever compiles."""
+    ``max_batch`` — the closed set of batch shapes serving ever compiles.
+
+    ``multiple``: every bucket is a multiple of it (the bank count, when a
+    bucket is batch-sharded across a device mesh — each bank must receive
+    an equal shard). ``max_batch`` is rounded up to the next multiple.
+    """
     if max_batch < 1:
         raise ValueError("max_batch must be >= 1")
-    sizes, b = [], 1
-    while b < max_batch:
+    if multiple < 1:
+        raise ValueError("bucket multiple must be >= 1")
+    cap = -(-max_batch // multiple) * multiple
+    sizes, b = [], multiple
+    while b < cap:
         sizes.append(b)
         b *= 2
-    sizes.append(max_batch)
+    sizes.append(cap)
     return sizes
 
 
-def bucket_for(n: int, max_batch: int) -> int:
+def bucket_for(n: int, max_batch: int, multiple: int = 1) -> int:
     """Smallest bucket holding ``n`` examples."""
-    for b in bucket_sizes(max_batch):
+    for b in bucket_sizes(max_batch, multiple):
         if n <= b:
             return b
     raise ValueError(f"batch {n} exceeds max_batch={max_batch}")
@@ -182,65 +199,133 @@ class BucketedRunner:
     quantizers use calibration-time constants), so padding rows cannot
     leak into real rows — asserted bit-exactly by the serving soak test.
 
-    ``compiles``/``hits`` count bucket-cache misses/hits: a miss is
-    exactly one XLA compile (the jit function is private to this runner,
-    so a first-seen bucket shape is a first-seen jit shape).
+    Device placement (the mesh-of-MVU-banks serving path — one of):
+
+    * default — the whole batch runs on the default device (seed behavior);
+    * ``mesh`` — each bucket is batch-**sharded** across the bank mesh via
+      :class:`repro.distributed.program_parallel.ShardedProgram`; buckets
+      are multiples of the bank count so every bank gets an equal shard;
+    * ``banks`` (device list) — the whole batch is **placed** on one bank:
+      ``runner(x, bank=b)`` runs against that bank's parameter replica
+      (replicated once per device through ``replica_cache``, so variants
+      sharing packed planes share the per-bank buffers too). jax caches
+      one executable per (bucket, device placement), so the jit cache is
+      the closed set {bucket} x {bank} — warmed up front, zero steady-state
+      recompiles.
+
+    ``compiles``/``hits`` count (bank, bucket)-cache misses/hits: a miss
+    is exactly one XLA compile (the jit function is private to this
+    runner, so a first-seen (bucket shape, placement) is a first-seen jit
+    key).
     """
 
     def __init__(self, program, *, max_batch: int = 32,
                  backend: Optional[str] = None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 mesh=None, banks=None, replica_cache=None):
         import threading
+        if mesh is not None and banks is not None:
+            raise ValueError("pass mesh= (sharded) or banks= (placed), "
+                             "not both")
         self.program = program
         self.max_batch = max_batch
-        self._fn = jax.jit(make_runner(program, backend=backend,
-                                       interpret=interpret))
-        self._seen: Set[int] = set()
+        self._multiple = 1
+        self._sharded = None
+        self._banks = None
+        if mesh is not None:
+            from repro.distributed.program_parallel import ShardedProgram
+            self._sharded = ShardedProgram(
+                program, mesh, backend=backend, interpret=interpret,
+                replica_cache=replica_cache)
+            self._multiple = self._sharded.n_banks
+            self.n_banks = self._sharded.n_banks
+            self.placement = "sharded"
+        elif banks is not None:
+            from repro.distributed.program_parallel import replicate_params
+            self._banks = list(banks)
+            if not self._banks:
+                raise ValueError("banks= needs at least one device")
+            self.n_banks = len(self._banks)
+            self.placement = "banked"
+            self._bank_params = [
+                replicate_params(program.params, d, cache=replica_cache)
+                for d in self._banks]
+            self._fn = jax.jit(make_runner(program, backend=backend,
+                                           interpret=interpret))
+        else:
+            self.n_banks = 1
+            self.placement = "single"
+            self._fn = jax.jit(make_runner(program, backend=backend,
+                                           interpret=interpret))
+        self._seen: Set[tuple] = set()   # (bank, bucket) jit-cache keys
         # counters mutate on the serving worker while metrics() snapshots
         # them from user threads
         self._lock = threading.Lock()
         self.compiles = 0
         self.hits = 0
 
-    def __call__(self, x):
+    def __call__(self, x, *, bank: Optional[int] = None):
         x = jnp.asarray(x)
         n = x.shape[0]
-        b = bucket_for(n, self.max_batch)
+        b = bucket_for(n, self.max_batch, self._multiple)
         if b != n:
             pad = jnp.zeros((b - n,) + x.shape[1:], x.dtype)
             x = jnp.concatenate([x, pad], axis=0)
+        if self._banks is not None:
+            bank = 0 if bank is None else bank
+            if not 0 <= bank < self.n_banks:
+                raise ValueError(f"bank {bank} out of range "
+                                 f"[0, {self.n_banks})")
+            key = (bank, b)
+        else:
+            key = (0, b)
         with self._lock:
-            if b in self._seen:
+            if key in self._seen:
                 self.hits += 1
             else:
-                self._seen.add(b)
+                self._seen.add(key)
                 self.compiles += 1
+        if self._sharded is not None:
+            return self._sharded(x)[:n]
+        if self._banks is not None:
+            return self._fn(self._bank_params[bank], x)[:n]
         return self._fn(self.program.params, x)[:n]
 
     def warmup(self, example_shape=None) -> int:
-        """Compile every bucket ahead of traffic; returns compile count."""
+        """Compile every (bucket, bank) ahead of traffic; returns the
+        number of compiles triggered."""
         shape = (tuple(example_shape) if example_shape is not None
                  else self.program.meta.get("input_shape"))
         if shape is None:
             raise ValueError("program has no recorded input_shape — pass "
                              "example_shape explicitly")
         before = self.compiles
-        for b in bucket_sizes(self.max_batch):
-            if b not in self._seen:
-                jax.block_until_ready(
-                    self(jnp.zeros((b,) + shape, jnp.float32)))
+        banks = (range(self.n_banks) if self._banks is not None else (None,))
+        for b in bucket_sizes(self.max_batch, self._multiple):
+            for bank in banks:
+                key = (bank or 0, b)
+                if key not in self._seen:
+                    jax.block_until_ready(
+                        self(jnp.zeros((b,) + shape, jnp.float32),
+                             bank=bank))
         return self.compiles - before
 
     def stats(self) -> Dict:
         with self._lock:
             return {"compiles": self.compiles, "hits": self.hits,
-                    "buckets": sorted(self._seen),
-                    "bucket_set": bucket_sizes(self.max_batch)}
+                    "buckets": sorted({b for _, b in self._seen}),
+                    "bucket_set": bucket_sizes(self.max_batch,
+                                               self._multiple),
+                    "n_banks": self.n_banks,
+                    "placement": self.placement}
 
 
 def make_bucketed_runner(program, *, max_batch: int = 32,
                          backend: Optional[str] = None,
-                         interpret: Optional[bool] = None) -> BucketedRunner:
+                         interpret: Optional[bool] = None,
+                         mesh=None, banks=None,
+                         replica_cache=None) -> BucketedRunner:
     """The serving entry point: ``runner(x) -> y`` over padding buckets."""
     return BucketedRunner(program, max_batch=max_batch, backend=backend,
-                          interpret=interpret)
+                          interpret=interpret, mesh=mesh, banks=banks,
+                          replica_cache=replica_cache)

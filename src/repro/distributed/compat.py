@@ -1,0 +1,41 @@
+"""jax API compatibility for the distributed modules.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (taking
+``check_rep``/``auto``) to ``jax.shard_map`` (taking ``check_vma``/
+``axis_names``) across the jax versions this repo supports. Every
+shard_map call site goes through :func:`shard_map` here so the rest of
+the code is version-agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[frozenset] = None, check: bool = False):
+    """Version-portable ``shard_map``.
+
+    ``axis_names``: mesh axes the body handles manually (None = all of
+    them — the common case). ``check``: replication/VMA checking (the new
+    API's ``check_vma``, the old API's ``check_rep``).
+    """
+    manual = (frozenset(mesh.axis_names) if axis_names is None
+              else frozenset(axis_names))
+    if hasattr(jax, "shard_map"):              # jax >= 0.6
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=manual,
+                             check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    # The legacy lowering of partially-manual shard_map emits PartitionId,
+    # which XLA's SPMD partitioner rejects on CPU. Run every axis manual
+    # instead: axes outside ``axis_names`` are simply never referenced by
+    # the body, and unsharded dims arrive replicated — same result, at the
+    # cost of in-stage auto-parallelism (which the legacy path can't
+    # express on CPU anyway).
+    return _sm(f, mesh, in_specs, out_specs, check_rep=check,
+               auto=frozenset())

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.compat import shard_map
+
 __all__ = ["gpipe", "stage_stack"]
 
 
@@ -27,7 +29,12 @@ def stage_stack(tree, n_stages: int):
     """Re-stack per-layer params (L, ...) into (n_stages, L/S, ...)."""
     def f(x):
         l = x.shape[0]
-        assert l % n_stages == 0, (l, n_stages)
+        if n_stages < 1 or l % n_stages != 0:
+            # a bare assert here vanishes under `python -O` and the reshape
+            # below then silently folds layers across stage boundaries
+            raise ValueError(
+                f"stage_stack: leading (layer) dim {l} is not divisible "
+                f"by n_stages={n_stages} (leaf shape {x.shape})")
         return x.reshape((n_stages, l // n_stages) + x.shape[1:])
     return jax.tree.map(f, tree)
 
@@ -44,7 +51,11 @@ def gpipe(stage_fn: Callable, stage_params, x, *, mesh: Mesh,
     n_stages = mesh.shape[stage_axis]
     nm = n_microbatches or n_stages
     b = x.shape[0]
-    assert b % nm == 0, (b, nm)
+    if nm < 1 or b % nm != 0:
+        raise ValueError(
+            f"gpipe: batch {b} is not divisible into n_microbatches={nm} "
+            f"(stage_axis={stage_axis!r} has {n_stages} stages); pad the "
+            f"batch or pick n_microbatches dividing it")
     mb = b // nm
     xm = x.reshape((nm, mb) + x.shape[1:])
 
@@ -83,8 +94,8 @@ def gpipe(stage_fn: Callable, stage_params, x, *, mesh: Mesh,
             stage_axis)
         return outs
 
-    ym = jax.shard_map(run, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs,
-                       axis_names=frozenset({stage_axis}),
-                       check_vma=False)(stage_params, xm)
+    ym = shard_map(run, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs,
+                   axis_names=frozenset({stage_axis}),
+                   check=False)(stage_params, xm)
     return ym.reshape((b,) + x.shape[1:])

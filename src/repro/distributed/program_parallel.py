@@ -1,0 +1,345 @@
+"""Program parallelism: one 8-slot MVU bank per chip, many chips.
+
+The paper's throughput story is *array scaling*: the same 8-MVU fabric is
+instantiated as many times as the FPGA allows, and a bigger part simply
+carries more banks (§4, "regardless of the target FPGA size"; FINN-R makes
+the same knob central). The jax analogue treats **each device as one MVU
+bank** and scales compiled :class:`~repro.compiler.lower.Program`s across
+the mesh in three placement styles:
+
+* :class:`ShardedProgram` — data parallel: one jit call whose batch dim is
+  sharded over the ``bank`` mesh axis; every bank executes the same
+  command stream on its shard (the paper's *Distributed* mapping across
+  chips). Weight planes are replicated once per device through
+  :func:`replicate_params`.
+* banked placement (see ``banks=`` on
+  :class:`repro.compiler.executor.BucketedRunner`) — whole micro-batches
+  are placed on a single bank chosen by the
+  :class:`~repro.serving.scheduler.SlotScheduler`, so mixed-precision
+  traffic load-balances across banks.
+* :class:`PipelinedProgram` — the paper's *Pipelined* mapping lifted from
+  MVU→MVU crossbar streaming to chip→chip transfers: consecutive Program
+  steps live on consecutive banks and microbatches stream through the
+  stage wavefront (same schedule as
+  :func:`repro.distributed.pipeline_parallel.gpipe`, realised with
+  explicit per-device placement because Program stages are heterogeneous
+  pytrees that cannot stack into one ``shard_map`` operand).
+
+Replication goes through :class:`ReplicaCache`, keyed on the identity of
+the source array: the serving registry's content-addressed pack cache
+(:meth:`repro.serving.registry.ModelRegistry._share_packed`) already makes
+W2A2/W2A8 variants of one model hold the *same* ``w_packed`` objects, so
+identity-keyed replication puts each unique packed plane on each bank
+exactly once, no matter how many precision variants serve from it.
+
+Everything here runs on CPU under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``, which is how the
+tests and benchmarks exercise a >=4-bank mesh without accelerators.
+"""
+
+from __future__ import annotations
+
+import threading
+import weakref
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compiler import executor as _executor
+
+__all__ = ["BANK_AXIS", "bank_mesh", "bank_devices", "ReplicaCache",
+           "replicate_params", "ShardedProgram", "PipelinedProgram",
+           "stage_partition"]
+
+BANK_AXIS = "bank"
+
+
+def bank_devices(n_banks: Optional[int] = None,
+                 devices: Optional[Sequence] = None) -> List:
+    """The first ``n_banks`` devices (default: all). Raises a ValueError
+    naming the host-platform flag when the process has too few devices."""
+    devs = list(devices) if devices is not None else list(jax.devices())
+    n = len(devs) if n_banks is None else n_banks
+    if n < 1:
+        raise ValueError(f"need at least 1 bank, got n_banks={n}")
+    if n > len(devs):
+        raise ValueError(
+            f"n_banks={n} but only {len(devs)} jax device(s) are visible — "
+            f"on CPU, set XLA_FLAGS=--xla_force_host_platform_device_count"
+            f"={n} before importing jax")
+    return devs[:n]
+
+
+def bank_mesh(n_banks: Optional[int] = None, *,
+              devices: Optional[Sequence] = None) -> Mesh:
+    """A 1-D mesh whose ``bank`` axis is the array of MVU banks."""
+    return Mesh(np.array(bank_devices(n_banks, devices)), (BANK_AXIS,))
+
+
+# --------------------------------------------------------------------------
+# replica cache: each unique weight plane lands on each bank once
+# --------------------------------------------------------------------------
+
+class ReplicaCache:
+    """Identity-keyed dedup of device replicas.
+
+    ``replicate(arr, placement)`` returns the (cached) copy of ``arr``
+    under ``placement`` (a device or a sharding). The key is
+    ``(id(arr), placement)`` with a weakref on the source, so:
+
+    * arrays shared between Programs — the registry's content-addressed
+      ``w_packed`` planes — replicate once per bank and every variant
+      serves from the same per-bank buffers;
+    * dropping the last source reference evicts the replica entry (the
+      cache never pins freed planes, mirroring the registry's weak-value
+      pack cache).
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cache: Dict[tuple, tuple] = {}
+        self.replicas = 0          # device_put calls actually issued
+        self.shared = 0            # replications answered from cache
+        self.shared_bytes = 0      # bytes NOT re-copied thanks to sharing
+
+    def replicate(self, arr, placement):
+        key = (id(arr), placement)
+        with self._lock:
+            hit = self._cache.get(key)
+            if hit is not None and hit[0]() is arr:
+                self.shared += 1
+                self.shared_bytes += int(getattr(arr, "nbytes", 0))
+                return hit[1]
+        rep = jax.device_put(arr, placement)
+        try:
+            ref = weakref.ref(
+                arr, lambda _, k=key: self._cache.pop(k, None))
+        except TypeError:          # not weakref-able (e.g. python scalar)
+            return rep
+        with self._lock:
+            # re-check under the lock: a concurrent replicate of the same
+            # plane may have won the race while we copied — keep its
+            # replica so "once per bank" and the counters stay truthful
+            hit = self._cache.get(key)
+            if hit is not None and hit[0]() is arr:
+                self.shared += 1
+                self.shared_bytes += int(getattr(arr, "nbytes", 0))
+                return hit[1]
+            self._cache[key] = (ref, rep)
+            self.replicas += 1
+        return rep
+
+    def stats(self) -> Dict:
+        with self._lock:
+            return {"entries": len(self._cache), "replicas": self.replicas,
+                    "shared": self.shared,
+                    "shared_bytes": self.shared_bytes}
+
+
+def replicate_params(params, placement, *, cache: Optional[ReplicaCache]
+                     = None):
+    """Place every leaf of a Program params pytree under ``placement``
+    (one device, or a replicated sharding over the bank mesh), deduping
+    shared leaves through ``cache``."""
+    if cache is None:
+        return jax.tree.map(lambda a: jax.device_put(a, placement), params)
+    return jax.tree.map(lambda a: cache.replicate(a, placement), params)
+
+
+# --------------------------------------------------------------------------
+# data-parallel: batch sharded over the bank axis
+# --------------------------------------------------------------------------
+
+class ShardedProgram:
+    """Batch-sharded execution of one compiled Program over a bank mesh.
+
+    One jit call: params replicated over ``bank``, the batch dim sharded
+    over it, the output sharded the same way. Every lowered step is
+    example-independent, so each bank computing its shard is bit-identical
+    to the single-device run on the full batch — asserted by the mesh soak
+    test. Batches must divide by the bank count; the serving path
+    guarantees that by using buckets that are multiples of it
+    (:func:`repro.compiler.executor.bucket_sizes` with ``multiple``).
+    """
+
+    def __init__(self, program, mesh: Optional[Mesh] = None, *,
+                 backend: Optional[str] = None,
+                 interpret: Optional[bool] = None,
+                 replica_cache: Optional[ReplicaCache] = None):
+        self.program = program
+        self.mesh = mesh if mesh is not None else bank_mesh()
+        if BANK_AXIS not in self.mesh.axis_names:
+            raise ValueError(f"mesh has axes {self.mesh.axis_names}, "
+                             f"expected a {BANK_AXIS!r} axis — build it "
+                             "with bank_mesh()")
+        self.n_banks = int(self.mesh.shape[BANK_AXIS])
+        replicated = NamedSharding(self.mesh, P())
+        self._in_shard = NamedSharding(self.mesh, P(BANK_AXIS))
+        self.params = replicate_params(program.params, replicated,
+                                       cache=replica_cache)
+        self._fn = jax.jit(
+            _executor.make_runner(program, backend=backend,
+                                  interpret=interpret),
+            out_shardings=self._in_shard)
+
+    def __call__(self, x):
+        x = jnp.asarray(x)
+        if x.shape[0] % self.n_banks != 0:
+            raise ValueError(
+                f"batch {x.shape[0]} does not divide across "
+                f"{self.n_banks} banks — pad to a multiple (the bucketed "
+                "runner does this automatically)")
+        x = jax.device_put(x, self._in_shard)
+        return self._fn(self.params, x)
+
+
+# --------------------------------------------------------------------------
+# pipeline-parallel: consecutive Program steps on consecutive banks
+# --------------------------------------------------------------------------
+
+_HEAVY_KINDS = {"conv_packed", "gemm_packed", "host_conv", "host_gemm"}
+
+
+def _step_cost(st) -> float:
+    return 1.0 if st.kind in _HEAVY_KINDS else 0.01
+
+
+def stage_partition(program, n_stages: int):
+    """Cut a Program's step list into ``n_stages`` contiguous stages.
+
+    A cut position is *valid* when exactly one live tensor crosses it
+    (that tensor becomes the chip→chip transfer); residual-block interiors
+    — where the skip tensor is live alongside the main path — are
+    automatically excluded. Among valid positions, cuts are placed nearest
+    the cost quantiles (heavy = packed conv/gemm steps) so stages balance.
+
+    Returns ``(bounds, stage_inputs, stage_outputs)``: ``bounds`` is a
+    list of ``(start, end)`` step-index ranges; the name lists give each
+    stage's boundary tensors.
+    """
+    steps = program.steps
+    if n_stages < 1:
+        raise ValueError(f"n_stages must be >= 1, got {n_stages}")
+    if n_stages == 1:
+        return ([(0, len(steps))], [program.input_name],
+                [program.output_name])
+    if n_stages > len(steps):
+        raise ValueError(f"n_stages={n_stages} exceeds the Program's "
+                         f"{len(steps)} steps")
+    produced = {program.input_name: -1}
+    for i, st in enumerate(steps):
+        produced[st.output] = i
+    consumed: Dict[str, List[int]] = {}
+    for i, st in enumerate(steps):
+        for t in st.inputs:
+            consumed.setdefault(t, []).append(i)
+    # the program output is "consumed" after the last step
+    consumed.setdefault(program.output_name, []).append(len(steps))
+
+    cuts: Dict[int, str] = {}
+    for p in range(1, len(steps)):
+        crossing = {t for t, pi in produced.items()
+                    if pi < p and any(c >= p for c in consumed.get(t, []))}
+        if len(crossing) == 1:
+            cuts[p] = next(iter(crossing))
+    if len(cuts) < n_stages - 1:
+        raise ValueError(
+            f"Program {program.graph_name!r} has only {len(cuts)} valid "
+            f"pipeline cut(s) (positions where one tensor is live) but "
+            f"n_stages={n_stages} needs {n_stages - 1}")
+
+    costs = [_step_cost(st) for st in steps]
+    cum = np.cumsum(costs)
+    total = float(cum[-1])
+    avail = sorted(cuts)
+    chosen: List[int] = []
+    prev = 0
+    for s in range(1, n_stages):
+        still_needed = n_stages - 1 - len(chosen) - 1
+        cands = [p for p in avail
+                 if p > prev and sum(1 for q in avail if q > p)
+                 >= still_needed]
+        if not cands:
+            raise ValueError(
+                f"cannot place cut {s} of {n_stages - 1}: no valid "
+                f"position after step {prev} leaves enough later cuts")
+        target = total * s / n_stages
+        p = min(cands, key=lambda p: (abs(float(cum[p - 1]) - target), p))
+        chosen.append(p)
+        prev = p
+    bounds = [0] + chosen + [len(steps)]
+    ranges = [(bounds[i], bounds[i + 1]) for i in range(n_stages)]
+    stage_inputs = [program.input_name] + [cuts[p] for p in chosen]
+    stage_outputs = [cuts[p] for p in chosen] + [program.output_name]
+    return ranges, stage_inputs, stage_outputs
+
+
+class PipelinedProgram:
+    """GPipe-style wavefront over a Program's own step list.
+
+    Stage ``s`` (a contiguous slice of steps, balanced by packed-op cost)
+    lives on device ``s``; microbatch ``m`` occupies stage ``s`` at
+    wavefront step ``m+s``. The chip→chip hop is an explicit
+    ``jax.device_put`` — the ICI analogue of the paper's §3.1.6 MVU→MVU
+    crossbar write — and jax's async dispatch overlaps stage ``s`` of
+    microbatch ``m`` with stage ``s-1`` of microbatch ``m+1`` exactly like
+    :func:`~repro.distributed.pipeline_parallel.gpipe`'s schedule (which
+    this class cannot reuse directly: Program stages are heterogeneous
+    pytrees, and ``shard_map`` needs stage-stackable leaves).
+
+    Bit-exactness: stages partition the step list, every tensor crosses
+    exactly one boundary, so outputs equal the single-device Program call.
+    """
+
+    def __init__(self, program, mesh: Optional[Mesh] = None, *,
+                 n_stages: Optional[int] = None,
+                 n_microbatches: Optional[int] = None,
+                 devices: Optional[Sequence] = None,
+                 backend: Optional[str] = None,
+                 interpret: Optional[bool] = None,
+                 replica_cache: Optional[ReplicaCache] = None):
+        if mesh is not None:
+            devices = list(mesh.devices.flat)
+        devs = bank_devices(n_stages, devices)
+        self.program = program
+        self.n_stages = len(devs)
+        self.devices = devs
+        self.n_microbatches = n_microbatches
+        bounds, ins, outs = stage_partition(program, self.n_stages)
+        self.stage_bounds: List[Tuple[int, int]] = bounds
+        self._fns = []
+        self._params = []
+        for s, (a, b) in enumerate(bounds):
+            stage_steps = program.steps[a:b]
+            fn = _executor.make_runner(
+                program, backend=backend, interpret=interpret,
+                steps=stage_steps, input_name=ins[s], output_name=outs[s])
+            self._fns.append(jax.jit(fn))
+            sub = {st.name: program.params[st.name] for st in stage_steps
+                   if st.name in program.params}
+            self._params.append(
+                replicate_params(sub, devs[s], cache=replica_cache))
+
+    def __call__(self, x, *, n_microbatches: Optional[int] = None):
+        x = jnp.asarray(x)
+        n = x.shape[0]
+        nm = n_microbatches or self.n_microbatches or min(self.n_stages, n)
+        if nm < 1 or n % nm != 0:
+            raise ValueError(
+                f"batch {n} is not divisible into n_microbatches={nm} "
+                f"({self.n_stages} stages) — pad the batch or pick a "
+                "dividing microbatch count")
+        mb = n // nm
+        outs = []
+        for m in range(nm):
+            h = x[m * mb:(m + 1) * mb]
+            for s in range(self.n_stages):
+                h = jax.device_put(h, self.devices[s])   # crossbar hop
+                h = self._fns[s](self._params[s], h)
+            outs.append(h)
+        # microbatch results all live on the last bank; concat there
+        return jnp.concatenate(
+            [jax.device_put(o, self.devices[-1]) for o in outs], axis=0)

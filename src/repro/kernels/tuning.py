@@ -17,7 +17,9 @@ once per (shape, spec) and every later call is a dict hit.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 from typing import Optional, Tuple
 
 from repro.core import bitops
@@ -27,7 +29,7 @@ from repro.core.cost_model import (TPUConfig, conv_kernel_cost,
                                    kernel_vmem_bytes)
 
 __all__ = ["TileConfig", "choose_tile", "ConvTileConfig", "choose_conv_tile",
-           "clear_cache", "cache_info"]
+           "clear_cache", "cache_info", "set_cache_limit"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,7 +54,49 @@ _BM_CANDIDATES = (8, 16, 32, 64, 128, 256, 512)
 _BN_CANDIDATES = (32, 64, 128, 256, 512)     # %32: packed-output word axis
 _BK_CANDIDATES = (32, 64, 128, 256, 512, 1024)
 
-_cache: dict = {}
+# Bounded LRU: a long-lived multi-tenant service facing churning shapes
+# (every new (shape, spec) is one entry) must not grow this without bound.
+# Re-tuning an evicted key is pure arithmetic — ~ms, no compilation — so a
+# modest cap only costs the rare cold re-enumeration.
+_CACHE_LIMIT_DEFAULT = 4096
+_cache: "collections.OrderedDict" = collections.OrderedDict()
+_cache_lock = threading.Lock()
+_cache_limit = _CACHE_LIMIT_DEFAULT
+_cache_stats = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def _cache_get(key):
+    with _cache_lock:
+        hit = _cache.get(key)
+        if hit is not None:
+            _cache.move_to_end(key)        # LRU touch
+            _cache_stats["hits"] += 1
+        else:
+            _cache_stats["misses"] += 1
+        return hit
+
+
+def _cache_put(key, value) -> None:
+    with _cache_lock:
+        _cache[key] = value
+        _cache.move_to_end(key)
+        while len(_cache) > _cache_limit:
+            _cache.popitem(last=False)
+            _cache_stats["evictions"] += 1
+
+
+def set_cache_limit(limit: int) -> int:
+    """Resize the tuner cache (evicting LRU overflow); returns the old
+    limit so callers/tests can restore it."""
+    global _cache_limit
+    if limit < 1:
+        raise ValueError(f"cache limit must be >= 1, got {limit}")
+    with _cache_lock:
+        old, _cache_limit = _cache_limit, limit
+        while len(_cache) > _cache_limit:
+            _cache.popitem(last=False)
+            _cache_stats["evictions"] += 1
+    return old
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -81,7 +125,7 @@ def choose_tile(m: int, k: int, n: int, spec: SerialSpec, *,
     Results are memoized per (shape, spec, out_bits, tpu).
     """
     key = (m, k, n, spec, out_bits, tpu)
-    hit = _cache.get(key)
+    hit = _cache_get(key)
     if hit is not None:
         return hit
 
@@ -113,7 +157,7 @@ def choose_tile(m: int, k: int, n: int, spec: SerialSpec, *,
         best = TileConfig(_BM_CANDIDATES[0], _BN_CANDIDATES[0],
                           _BK_CANDIDATES[0], False, False, float("inf"),
                           0)
-    _cache[key] = best
+    _cache_put(key, best)
     return best
 
 
@@ -157,7 +201,7 @@ def choose_conv_tile(n: int, h: int, w: int, ci: int, co: int, *,
     """
     key = ("conv", n, h, w, ci, co, fh, fw, stride, padding, spec, out_bits,
            fix_bco, fix_bnb, tpu)
-    hit = _cache.get(key)
+    hit = _cache_get(key)
     if hit is not None:
         return hit
 
@@ -191,13 +235,18 @@ def choose_conv_tile(n: int, h: int, w: int, ci: int, co: int, *,
     if best is None:  # degenerate: nothing fit the budget — smallest tile
         best = ConvTileConfig(fix_bco or _BCO_CANDIDATES[0], fix_bnb or 1,
                               False, False, float("inf"), 0)
-    _cache[key] = best
+    _cache_put(key, best)
     return best
 
 
 def clear_cache() -> None:
-    _cache.clear()
+    with _cache_lock:
+        _cache.clear()
+        for k in _cache_stats:
+            _cache_stats[k] = 0
 
 
 def cache_info() -> dict:
-    return {"entries": len(_cache)}
+    with _cache_lock:
+        return {"entries": len(_cache), "limit": _cache_limit,
+                **_cache_stats}

@@ -191,7 +191,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, radix: int = 7,
     if os.path.exists(path) and not force:
         with open(path) as f:
             return json.load(f)
-    t0 = time.time()
+    t0 = time.perf_counter()
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
            "radix": radix, "tag": tag, "ok": False}
     try:
@@ -202,9 +202,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, radix: int = 7,
         with mesh, bind_axes(dp=dp_axes_of(mesh), tp="model", mesh=mesh):
             jitted = jax.jit(fn, in_shardings=in_sh, **jit_kw)
             lowered = jitted.lower(*inputs)
-            t_lower = time.time() - t0
+            t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.perf_counter() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
         txt = compiled.as_text()
@@ -234,7 +234,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, radix: int = 7,
     except Exception as e:
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-2000:]
-    rec["wall_s"] = round(time.time() - t0, 1)
+    rec["wall_s"] = round(time.perf_counter() - t0, 1)
     with open(path, "w") as f:
         json.dump(rec, f, indent=1)
     status = "OK" if rec["ok"] else "FAIL"

@@ -152,12 +152,19 @@ class CNNServer:
     batch size is served out of the power-of-two padding-bucket jit cache
     instead of re-jitting per shape. The service worker is a daemon
     thread; ``close()`` (or use as a context manager) stops it.
+
+    ``n_banks``/``placement`` scale the service across a device mesh (one
+    8-slot MVU bank per jax device — on CPU, export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first):
+    ``placement="banked"`` load-balances micro-batches across banks,
+    ``"sharded"`` splits each micro-batch evenly over all of them.
     """
 
     def __init__(self, graph=None, *, calib=None, seed: int = 0,
                  calib_batch: int = 8, backend: str = "xla",
                  interpret: bool = False, policy=None, max_batch: int = 32,
-                 max_wait_s: float = 0.0):
+                 max_wait_s: float = 0.0, n_banks: Optional[int] = None,
+                 placement: str = "banked"):
         from repro.models.layers import QuantPolicy
         from repro.models.resnet import (ResNet9Config, resnet9_graph,
                                          resnet9_init)
@@ -183,7 +190,8 @@ class CNNServer:
         self.key = self.registry.register_graph(graph.name or "cnn", graph,
                                                 calib, policy)
         self.service = InferenceService(
-            self.registry, max_batch=max_batch, max_wait_s=max_wait_s)
+            self.registry, max_batch=max_batch, max_wait_s=max_wait_s,
+            n_banks=n_banks, placement=placement)
         self.service.start()
 
     @property
@@ -227,13 +235,20 @@ def _main_cnn(args, cfg) -> None:
     if args.no_quant:
         print("note: --no-quant is ignored on the CNN path (the compiled "
               "Program is the quantized deployment form)")
-    server = CNNServer(backend=backend, interpret=args.interpret)
+    if args.placement != "banked" and not args.banks:
+        print(f"note: --placement {args.placement} has no effect without "
+              "--banks N (serving single-device)")
+    server = CNNServer(backend=backend, interpret=args.interpret,
+                       n_banks=args.banks, placement=args.placement)
+    if args.banks and args.banks > 1:
+        print(f"serving across {server.service.n_banks} MVU banks "
+              f"(placement={server.service.placement})")
     rng = np.random.RandomState(0)
     images = rng.rand(args.batch, 32, 32, 3).astype(np.float32)
     server.classify(images)  # warmup/compile
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits = server.classify(images)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"classified {len(logits)} images in {dt*1e3:.1f}ms "
           f"({len(logits)/dt:.1f} img/s, compiled path, "
           f"backend={backend})")
@@ -242,6 +257,11 @@ def _main_cnn(args, cfg) -> None:
     print(f"serving: p50={m['latency_p50_ms']}ms "
           f"p99={m['latency_p99_ms']}ms "
           f"bucket_caches={m['bucket_caches']}")
+    if m["banks"]["n_banks"] > 1:
+        sched = m["scheduler"]
+        print(f"banks: util={sched['bank_utilization']} "
+              f"requests={sched['bank_requests']} "
+              f"replica_cache={m['banks']['replica_cache']}")
     print(server.cycle_report())
     server.close()
 
@@ -257,6 +277,15 @@ def main():
                     help="serial-matmul backend (default: arch policy)")
     ap.add_argument("--interpret", action="store_true",
                     help="run pallas backends interpreted (CPU)")
+    ap.add_argument("--banks", type=int, default=None,
+                    help="serve across N MVU banks (one per jax device; "
+                         "CNN path only — on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--placement", default="banked",
+                    choices=["banked", "sharded"],
+                    help="multi-bank placement: load-balance whole "
+                         "micro-batches (banked) or split each across "
+                         "all banks (sharded)")
     args = ap.parse_args()
     cfg = get_arch(args.arch).smoke
     if getattr(cfg, "family", None) == "cnn":
@@ -268,9 +297,9 @@ def main():
     rng = np.random.RandomState(0)
     reqs = [GenRequest(rng.randint(0, cfg.vocab_size, (8,)).astype(np.int32),
                        args.new_tokens) for _ in range(args.batch)]
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = server.generate(reqs)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     total = sum(len(r.out_tokens) for r in out)
     print(f"generated {total} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s, quantized={not args.no_quant})")

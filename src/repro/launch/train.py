@@ -155,9 +155,9 @@ def main():
     trainer = Trainer(cfg, opt_cfg=AdamWConfig(total_steps=args.steps),
                       mesh=mesh, ckpt_dir=args.ckpt_dir,
                       batch_size=args.batch, seq_len=args.seq)
-    t0 = time.time()
+    t0 = time.perf_counter()
     _, losses = trainer.run(args.steps)
-    print(f"done: {args.steps} steps in {time.time()-t0:.1f}s; "
+    print(f"done: {args.steps} steps in {time.perf_counter()-t0:.1f}s; "
           f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
 
 

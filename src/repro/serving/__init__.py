@@ -13,6 +13,13 @@ fabric runs mixed-precision networks without reconfiguration.
   (cost model + BarrelController simulation, per-slot utilization).
 * :mod:`repro.serving.service`   — the thread-driven front end:
   ``submit`` / ``submit_many`` / ``drain`` + the metrics snapshot.
+
+With ``n_banks > 1`` the service scales across a device mesh — one 8-slot
+MVU bank per jax device (:mod:`repro.distributed.program_parallel`): the
+scheduler books ``n_banks x 8`` slots, weight planes replicate once per
+device, and micro-batches either load-balance across banks
+(``placement="banked"``) or split evenly over all of them
+(``placement="sharded"``).
 """
 
 from repro.serving.batcher import (DynamicBatcher, MicroBatch, QueueFull,

@@ -63,13 +63,27 @@ class MicroBatch:
 
 
 class DynamicBatcher:
+    """See module docstring.
+
+    ``round_to``: device-count awareness for the bank-mesh serving path —
+    when draining a partially-filled queue (coalescing window expired)
+    with more than ``round_to`` requests waiting, the take is rounded
+    *down* to a multiple of it, so batches split evenly across ``n_banks``
+    devices with minimal zero-padding. Heads left behind are already past
+    their window and ship in the very next micro-batch. ``round_to=1``
+    (default) is the exact pre-mesh behavior.
+    """
+
     def __init__(self, *, max_batch: int = 32, max_wait_s: float = 0.002,
-                 max_queue: int = 256):
+                 max_queue: int = 256, round_to: int = 1):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if round_to < 1:
+            raise ValueError("round_to must be >= 1")
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self.max_queue = max_queue
+        self.round_to = round_to
         self._queues: Dict[ModelKey, Deque[Request]] = {}
         self._cv = threading.Condition()
         self._depth = 0
@@ -137,6 +151,8 @@ class DynamicBatcher:
                     now = time.perf_counter()
                     if len(q) >= cap or now >= window_end:
                         take = min(len(q), cap)
+                        if take > self.round_to:
+                            take -= take % self.round_to
                         reqs = [q.popleft() for _ in range(take)]
                         self._depth -= take
                         self.batches += 1

@@ -240,4 +240,8 @@ class ModelRegistry:
                 "evictions": self.evictions,
                 "shared_arrays": self.shared_arrays,
                 "shared_bytes": self.shared_bytes,
+                # live content-addressed planes: the per-bank replica
+                # cache (distributed/program_parallel) keys off these
+                # shared objects, so one entry = one plane per device
+                "pack_cache_entries": len(self._pack_cache),
             }

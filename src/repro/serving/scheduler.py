@@ -1,4 +1,4 @@
-"""MVU-slot scheduler: admission of micro-batches onto 8 virtual PE slots.
+"""MVU-slot scheduler: admission of micro-batches onto virtual PE slots.
 
 The paper's fabric has 8 MVUs, each CSR-programmable to its own precision
 (§3.1.1), and two mapping modes (§3.1.6). When several models — or the
@@ -18,16 +18,31 @@ that decision in the cycle domain:
   and estimated seconds; :meth:`complete` feeds back measured wall time so
   metrics expose both the modelled and the observed picture.
 
+**Bank scaling** (``n_banks > 1``): the slot pool generalizes from the
+single fabric's 8 slots to ``n_banks x 8`` — one 8-MVU bank per jax
+device, the paper's "bigger FPGA carries more banks" axis. Admission then
+has a placement decision:
+
+* ``placement="banked"`` — simulate the stream against *every* bank's
+  clock and book the one that finishes earliest, so mixed W2A2/W4A8
+  traffic load-balances across banks (a W4A8 batch books ~8x the cycles
+  of a W2A2 batch — a*w = 32 vs 4 bit-cycles; least-finish placement
+  keeps the banks even);
+* ``placement="sharded"`` — the batch is split evenly over all banks
+  (data-parallel :class:`~repro.distributed.program_parallel
+  .ShardedProgram` execution); every bank books the same stream at
+  ``cycle_scale = batch / n_banks``.
+
 Utilization is per-slot busy cycles over the virtual makespan — the same
 definition as :class:`~repro.runtime.controller.SimReport.utilization`,
-extended across every admitted batch.
+extended across every admitted batch and every bank.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.runtime.controller import BarrelController
 from repro.serving.registry import ModelKey
@@ -43,22 +58,39 @@ class Admission:
     finish_cycle: int         # virtual completion cycle
     est_cycles: int           # finish - start (this batch's span)
     est_seconds: float        # est_cycles at the controller clock
+    banks: Tuple[int, ...] = (0,)   # banks this batch was booked on
+
+    @property
+    def bank(self) -> int:
+        """The placed bank (banked placement books exactly one)."""
+        return self.banks[0]
 
 
 class SlotScheduler:
     def __init__(self, *, controller: Optional[BarrelController] = None,
-                 mode: str = "pipelined"):
+                 mode: str = "pipelined", n_banks: int = 1,
+                 placement: str = "banked"):
+        if n_banks < 1:
+            raise ValueError(f"n_banks must be >= 1, got {n_banks}")
+        if placement not in ("banked", "sharded"):
+            raise ValueError(f"unknown placement {placement!r} — "
+                             "'banked' or 'sharded'")
         self.controller = controller or BarrelController()
-        self.slots = self.controller.harts
+        self.n_banks = n_banks
+        self.placement = placement
+        self.slots = self.controller.harts * n_banks
         self.mode = mode
         self._lock = threading.Lock()
-        self._hart_free: List[int] = [0] * self.slots
-        self._busy: List[int] = [0] * self.slots
+        h = self.controller.harts
+        self._hart_free: List[List[int]] = [[0] * h for _ in range(n_banks)]
+        self._busy: List[List[int]] = [[0] * h for _ in range(n_banks)]
         self._streams: Dict[ModelKey, object] = {}
         self.admitted = 0
         self.admitted_requests = 0
         self.unscheduled = 0          # opaque engines with no stream
         self.wall_seconds = 0.0
+        self.bank_batches = [0] * n_banks
+        self.bank_requests = [0] * n_banks
 
     # --------------------------------------------------------------- stream
     def stream_for(self, key: ModelKey, program=None, stream=None):
@@ -76,6 +108,23 @@ class SlotScheduler:
             return cs
 
     # ------------------------------------------------------------ admission
+    def _simulate_on(self, bank: int, cs, batch: int):
+        """One bank's tentative schedule for this stream (not committed)."""
+        return self.controller.simulate(
+            cs, hart_free=self._hart_free[bank],
+            cycle_scale=max(1, batch))
+
+    def _commit(self, bank: int, rep, cs, batch: int) -> Tuple[int, int]:
+        started = [s for s, j in zip(rep.per_job_start, cs.jobs)
+                   if j.mvu >= 0]
+        start = min(started, default=rep.makespan_cycles)
+        self._hart_free[bank] = rep.hart_free
+        for h in range(self.controller.harts):
+            self._busy[bank][h] += rep.per_mvu_busy[h]
+        self.bank_batches[bank] += 1
+        self.bank_requests[bank] += batch
+        return start, rep.makespan_cycles
+
     def admit(self, key: ModelKey, batch: int, *, program=None,
               stream=None) -> Optional[Admission]:
         """Book ``batch`` inputs of ``key`` onto the virtual slots.
@@ -90,21 +139,41 @@ class SlotScheduler:
                 self.admitted_requests += batch
             return None
         with self._lock:
-            rep = self.controller.simulate(
-                cs, hart_free=self._hart_free, cycle_scale=max(1, batch))
-            started = [s for s, j in zip(rep.per_job_start, cs.jobs)
-                       if j.mvu >= 0]
-            start = min(started, default=rep.makespan_cycles)
-            self._hart_free = rep.hart_free
-            for h in range(self.slots):
-                self._busy[h] += rep.per_mvu_busy[h]
+            if self.placement == "sharded" and self.n_banks > 1:
+                # data-parallel: every bank runs the stream on its shard.
+                # Split exactly (first banks take the remainder) so
+                # sum(bank_requests) == admitted requests; banks with an
+                # empty shard are not booked at all.
+                base, rem = divmod(batch, self.n_banks)
+                shards = [base + (1 if b < rem else 0)
+                          for b in range(self.n_banks)]
+                start = finish = None
+                booked = []
+                for b, shard in enumerate(shards):
+                    if shard == 0:
+                        continue
+                    rep = self._simulate_on(b, cs, shard)
+                    s, f = self._commit(b, rep, cs, shard)
+                    start = s if start is None else min(start, s)
+                    finish = f if finish is None else max(finish, f)
+                    booked.append(b)
+                banks = tuple(booked)
+            else:
+                # least-finish placement: the load-balancing decision
+                reports = [(self._simulate_on(b, cs, batch), b)
+                           for b in range(self.n_banks)]
+                rep, bank = min(reports,
+                                key=lambda rb: (rb[0].makespan_cycles,
+                                                rb[1]))
+                start, finish = self._commit(bank, rep, cs, batch)
+                banks = (bank,)
             self.admitted += 1
             self.admitted_requests += batch
-            est = rep.makespan_cycles - start
+            est = finish - start
             return Admission(
                 key=key, batch=batch, start_cycle=start,
-                finish_cycle=rep.makespan_cycles, est_cycles=est,
-                est_seconds=est / self.controller.freq_hz)
+                finish_cycle=finish, est_cycles=est,
+                est_seconds=est / self.controller.freq_hz, banks=banks)
 
     def complete(self, admission: Optional[Admission],
                  wall_seconds: float) -> None:
@@ -116,29 +185,44 @@ class SlotScheduler:
     @property
     def virtual_cycles(self) -> int:
         """The virtual clock: cycle at which the busiest slot frees."""
-        return max(self._hart_free, default=0)
+        return max((c for bank in self._hart_free for c in bank), default=0)
 
     def utilization(self) -> List[float]:
-        """Per-slot busy fraction of the virtual makespan so far."""
+        """Per-slot busy fraction of the virtual makespan so far
+        (flattened bank-major: slot ``b * 8 + h`` is hart h of bank b)."""
         span = self.virtual_cycles
+        flat = [c for bank in self._busy for c in bank]
         if span == 0:
             return [0.0] * self.slots
-        return [b / span for b in self._busy]
+        return [b / span for b in flat]
+
+    def bank_utilization(self) -> List[float]:
+        """Mean busy fraction per bank (the soak test's per-bank signal)."""
+        span = self.virtual_cycles
+        if span == 0:
+            return [0.0] * self.n_banks
+        h = self.controller.harts
+        return [sum(bank) / (h * span) for bank in self._busy]
 
     def metrics(self) -> Dict:
         with self._lock:
-            span = max(self._hart_free, default=0)
-            util = ([b / span for b in self._busy] if span
-                    else [0.0] * self.slots)
-            busy = [b for b in self._busy if b > 0]
+            span = self.virtual_cycles
+            util = self.utilization()
+            bank_util = self.bank_utilization()
+            busy = [c for bank in self._busy for c in bank if c > 0]
             return {
                 "mode": self.mode,
+                "placement": self.placement,
+                "n_banks": self.n_banks,
                 "admitted_batches": self.admitted,
                 "admitted_requests": self.admitted_requests,
                 "unscheduled_batches": self.unscheduled,
                 "virtual_cycles": span,
                 "virtual_seconds": span / self.controller.freq_hz,
                 "slot_utilization": [round(u, 4) for u in util],
+                "bank_utilization": [round(u, 4) for u in bank_util],
+                "bank_batches": list(self.bank_batches),
+                "bank_requests": list(self.bank_requests),
                 "mean_busy_utilization": (
                     round(sum(busy) / (len(busy) * span), 4)
                     if busy and span else 0.0),

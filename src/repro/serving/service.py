@@ -8,11 +8,29 @@ One worker thread pulls micro-batches from the
 * **Program variants** run through the executor's bucketed runner
   (:func:`repro.compiler.executor.make_bucketed_runner`) — one runner per
   (model, precision), padding buckets per runner, so the whole service's
-  jit-cache is the closed set {variant} x {bucket} and steady-state
-  traffic never recompiles (``metrics()["bucket_caches"]`` exposes the
-  counters the soak test asserts on);
+  jit-cache is the closed set {variant} x {bucket} (x {bank}) and
+  steady-state traffic never recompiles (``metrics()["bucket_caches"]``
+  exposes the counters the soak test asserts on);
 * **callable variants** (e.g. the autoregressive LM engine) receive the
   raw request list and return one result per request.
+
+**Bank scaling** (``n_banks > 1``): every jax device is one 8-slot MVU
+bank (:mod:`repro.distributed.program_parallel`). Two placements:
+
+* ``placement="banked"`` — the :class:`SlotScheduler` books each
+  micro-batch on the bank whose cycle clock frees earliest and the batch
+  runs against that bank's parameter replica, so mixed-precision traffic
+  load-balances across devices;
+* ``placement="sharded"`` — each micro-batch is split evenly over all
+  banks in one data-parallel jit call (buckets are multiples of the bank
+  count; the batcher rounds takes to it).
+
+In both, packed weight planes replicate **once per device** through a
+service-wide :class:`~repro.distributed.program_parallel.ReplicaCache`
+seeded by the registry's content-addressed sharing, and batch completion
+moves to a small finalize pool so the worker can keep dispatching to idle
+banks while earlier batches still compute (jax dispatch is async; a
+synchronous worker would serialize the mesh).
 
 Per-batch wall latency feeds the
 :class:`~repro.runtime.straggler.StragglerDetector`, so anomalous batches
@@ -27,7 +45,7 @@ from __future__ import annotations
 import collections
 import threading
 import time
-from concurrent.futures import Future
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -52,22 +70,62 @@ class InferenceService:
                  max_batch: int = 32, max_wait_s: float = 0.002,
                  max_queue: int = 256,
                  backend: Optional[str] = None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 n_banks: Optional[int] = None,
+                 placement: str = "banked",
+                 mesh=None):
         self.registry = registry
+        self.n_banks = 1 if n_banks is None else n_banks
+        if self.n_banks < 1:
+            raise ValueError(f"n_banks must be >= 1, got {n_banks}")
+        if placement not in ("banked", "sharded"):
+            # validate unconditionally: a typo must not silently degrade
+            # to single-device serving just because n_banks was defaulted
+            raise ValueError(f"unknown placement {placement!r} — "
+                             "'banked' or 'sharded'")
+        self._mesh = None
+        self._bank_devices = None
+        self._replicas = None
+        round_to = 1
+        if self.n_banks > 1 or mesh is not None:
+            from repro.distributed import program_parallel as pp
+            self.placement = placement
+            self._replicas = pp.ReplicaCache()
+            if placement == "sharded":
+                self._mesh = mesh if mesh is not None else pp.bank_mesh(
+                    self.n_banks)
+                self.n_banks = int(self._mesh.shape[pp.BANK_AXIS])
+                round_to = self.n_banks
+            elif placement == "banked":
+                devs = (list(mesh.devices.flat) if mesh is not None
+                        else None)
+                # the raw n_banks (None = every device of the given mesh),
+                # NOT self.n_banks: its None->1 default would silently
+                # shrink an explicit mesh to a single bank
+                self._bank_devices = pp.bank_devices(n_banks, devs)
+                self.n_banks = len(self._bank_devices)
+        else:
+            self.placement = "single"
         self.batcher = batcher or DynamicBatcher(
-            max_batch=max_batch, max_wait_s=max_wait_s, max_queue=max_queue)
-        self.scheduler = scheduler or SlotScheduler()
+            max_batch=max_batch, max_wait_s=max_wait_s, max_queue=max_queue,
+            round_to=round_to)
+        self.scheduler = scheduler or SlotScheduler(
+            n_banks=self.n_banks,
+            placement=("sharded" if self.placement == "sharded"
+                       else "banked"))
         self.straggler = straggler or StragglerDetector(window=64)
         self.backend = backend
         self.interpret = interpret
         self._runners: Dict[ModelKey, executor.BucketedRunner] = {}
         self._thread: Optional[threading.Thread] = None
+        self._pool: Optional[ThreadPoolExecutor] = None
         self._stop = threading.Event()
         self._pend_lock = threading.Condition()
         self._pending = 0
         self._batch_seq = 0
         # guards everything metrics() reads while the worker writes it
-        # (latency deque, runner dict, straggler window)
+        # (latency deque, runner dict, straggler window, counters — with a
+        # finalize pool several completions may land concurrently)
         self._mlock = threading.Lock()
         self._latencies = collections.deque(maxlen=4096)
         self.completed = 0
@@ -79,6 +137,10 @@ class InferenceService:
             return self
         self._stop.clear()
         self.batcher.reopen()
+        if self.n_banks > 1:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.n_banks,
+                thread_name_prefix="serving-finalize")
         self._thread = threading.Thread(target=self._loop,
                                         name="serving-worker", daemon=True)
         self._thread.start()
@@ -95,6 +157,10 @@ class InferenceService:
         self._stop.set()
         self._thread.join(timeout=30)
         self._thread = None
+        if self._pool is not None:
+            # every dispatched batch still in flight resolves its futures
+            self._pool.shutdown(wait=True)
+            self._pool = None
         n = self.batcher.flush_pending(
             RuntimeError("service stopped with requests still queued"))
         with self._pend_lock:
@@ -164,7 +230,9 @@ class InferenceService:
         prog = self.registry.program(key)  # touches LRU / lazy-compiles
         r = executor.make_bucketed_runner(
             prog, max_batch=self.batcher.max_batch,
-            backend=self.backend, interpret=self.interpret)
+            backend=self.backend, interpret=self.interpret,
+            mesh=self._mesh, banks=self._bank_devices,
+            replica_cache=self._replicas)
         with self._mlock:
             self._runners[key] = r
         return r
@@ -195,11 +263,59 @@ class InferenceService:
     def _run_batch(self, mb: MicroBatch) -> None:
         t0 = time.perf_counter()
         try:
-            results, admission = self._execute(mb)
+            pending, admission = self._dispatch(mb)
         except BaseException as e:  # noqa: BLE001 — worker must survive
             for r in mb.requests:
                 r.future.set_exception(e)
-            self.failed += len(mb.requests)
+            with self._mlock:
+                self.failed += len(mb.requests)
+            self._mark_done(len(mb.requests))
+            return
+        if self._pool is None:
+            self._finalize(mb, pending, admission, t0)
+        else:
+            # multi-bank: device work is in flight (jax dispatch is async);
+            # materialization + future resolution move off the worker so
+            # the next micro-batch can start on another bank immediately
+            self._pool.submit(self._finalize, mb, pending, admission, t0)
+
+    def _mark_done(self, n: int) -> None:
+        with self._pend_lock:
+            self._pending -= n
+            self._pend_lock.notify_all()
+
+    def _dispatch(self, mb: MicroBatch):
+        """Book the batch and launch its device work (no host sync)."""
+        entry = self.registry.entry(mb.key)
+        if entry.kind == "callable":
+            admission = self.scheduler.admit(mb.key, mb.size,
+                                             stream=entry.stream)
+            results = entry.fn([r.payload for r in mb.requests])
+            if len(results) != mb.size:
+                raise RuntimeError(
+                    f"engine {mb.key} returned {len(results)} results "
+                    f"for {mb.size} requests")
+            return ("list", results), admission
+        runner = self._runner_for(mb.key)
+        admission = self.scheduler.admit(mb.key, mb.size,
+                                         program=runner.program)
+        x = np.stack([np.asarray(r.payload) for r in mb.requests])
+        bank = (admission.bank
+                if admission is not None and runner.placement == "banked"
+                else None)
+        return ("array", runner(x, bank=bank)), admission
+
+    def _finalize(self, mb: MicroBatch, pending, admission,
+                  t0: float) -> None:
+        """Materialize the dispatched batch and resolve its futures."""
+        try:
+            kind, val = pending
+            results = val if kind == "list" else list(np.asarray(val))
+        except BaseException as e:  # noqa: BLE001 — pool must survive
+            for r in mb.requests:
+                r.future.set_exception(e)
+            with self._mlock:
+                self.failed += len(mb.requests)
             self._mark_done(len(mb.requests))
             return
         dt = time.perf_counter() - t0
@@ -212,31 +328,9 @@ class InferenceService:
                 self._latencies.append(done - r.t_submit)
         for r, y in zip(mb.requests, results):
             r.future.set_result(y)
-        self.completed += len(mb.requests)
+        with self._mlock:
+            self.completed += len(mb.requests)
         self._mark_done(len(mb.requests))
-
-    def _mark_done(self, n: int) -> None:
-        with self._pend_lock:
-            self._pending -= n
-            self._pend_lock.notify_all()
-
-    def _execute(self, mb: MicroBatch):
-        entry = self.registry.entry(mb.key)
-        if entry.kind == "callable":
-            admission = self.scheduler.admit(mb.key, mb.size,
-                                             stream=entry.stream)
-            results = entry.fn([r.payload for r in mb.requests])
-            if len(results) != mb.size:
-                raise RuntimeError(
-                    f"engine {mb.key} returned {len(results)} results "
-                    f"for {mb.size} requests")
-            return results, admission
-        runner = self._runner_for(mb.key)
-        admission = self.scheduler.admit(mb.key, mb.size,
-                                         program=runner.program)
-        x = np.stack([np.asarray(r.payload) for r in mb.requests])
-        y = np.asarray(runner(x))
-        return list(y), admission
 
     # -------------------------------------------------------------- metrics
     def metrics(self) -> Dict:
@@ -259,6 +353,12 @@ class InferenceService:
             "latency_p50_ms": round(pct(50) * 1e3, 3),
             "latency_p99_ms": round(pct(99) * 1e3, 3),
             "bucket_caches": buckets,
+            "banks": {
+                "n_banks": self.n_banks,
+                "placement": self.placement,
+                "replica_cache": (self._replicas.stats()
+                                  if self._replicas is not None else None),
+            },
             "scheduler": self.scheduler.metrics(),
             "straggler": straggler,
             "registry": self.registry.stats(),

@@ -1,0 +1,32 @@
+"""Shared subprocess harness for mesh tests: run a code body in a fresh
+interpreter with N fake CPU host-platform devices, so the main pytest
+process keeps its single-device view (the dry-run contract).
+
+``prelude`` is extra module-level source (fixture definitions) injected
+before the body; both are dedented independently, so call sites can pass
+indented triple-quoted strings.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(body: str, n: int = 8, prelude: str = "") -> str:
+    src = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
+        import jax, jax.numpy as jnp, numpy as np
+        {textwrap.indent(textwrap.dedent(prelude).strip(), '        ').strip()}
+        {textwrap.indent(textwrap.dedent(body).strip(), '        ').strip()}
+        print("SUBPROC_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", src], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "SUBPROC_OK" in out.stdout
+    return out.stdout

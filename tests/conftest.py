@@ -1,10 +1,16 @@
 """Test-suite bootstrap: fall back to the bundled hypothesis stub when the
 real library is not installed (bare interpreters / minimal CI images), so
 every tier-1 module still collects and runs. See requirements-dev.txt for
-the preferred full dev environment."""
+the preferred full dev environment.
+
+Also implements the two-tier test split: tests marked ``@pytest.mark.slow``
+(soak, e2e, subprocess-mesh) are skipped unless ``--runslow`` (or
+``RUN_SLOW=1``) is given, keeping the default tier-1 run fast."""
 
 import os
 import sys
+
+import pytest
 
 sys.path.insert(0, os.path.dirname(__file__))
 
@@ -14,3 +20,20 @@ except ImportError:
     import _hypothesis_stub
 
     _hypothesis_stub._install()
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="run tests marked slow (soak / e2e / subprocess-mesh)")
+
+
+def pytest_collection_modifyitems(config, items):
+    run_slow = os.environ.get("RUN_SLOW", "") not in ("", "0", "false")
+    if config.getoption("--runslow") or run_slow:
+        return
+    skip = pytest.mark.skip(reason="slow test — use --runslow (or "
+                                   "RUN_SLOW=1) to include")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)

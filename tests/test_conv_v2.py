@@ -276,6 +276,7 @@ def test_conv_tuned_blocks_run_bit_exact():
 
 # ------------------------------------------------------------ ResNet9 packed
 
+@pytest.mark.slow
 def test_resnet9_pack_hoists_weight_quantization():
     from repro.models.resnet import (ResNet9Config, resnet9_init,
                                      resnet9_forward,
@@ -290,6 +291,7 @@ def test_resnet9_pack_hoists_weight_quantization():
     np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
 
 
+@pytest.mark.slow
 def test_resnet9_packed_forward_matches_reference_xla():
     """conv1–conv8 end-to-end on the implicit-GEMM packed path (XLA
     backend) == the seed serial_conv2d forward, same calibration batch."""
@@ -307,6 +309,7 @@ def test_resnet9_packed_forward_matches_reference_xla():
                                rtol=2e-4, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_resnet9_packed_forward_pallas_small():
     """The same end-to-end chain through the Pallas kernel (interpret) on a
     reduced stack — packed chaining + pool-on-codes + strided stages."""

@@ -1,30 +1,14 @@
 """Distribution tests: run in subprocesses with 8 fake CPU devices so the
 main test process keeps its single-device view (per the dry-run contract)."""
 
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from _subproc import run_with_devices
 
-
-def run_with_devices(body: str, n: int = 8) -> str:
-    src = textwrap.dedent(f"""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
-        import jax, jax.numpy as jnp, numpy as np
-        {textwrap.indent(textwrap.dedent(body), '        ').strip()}
-        print("SUBPROC_OK")
-    """)
-    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
-    out = subprocess.run([sys.executable, "-c", src], capture_output=True,
-                         text=True, env=env, timeout=600)
-    assert out.returncode == 0, out.stderr[-4000:]
-    assert "SUBPROC_OK" in out.stdout
-    return out.stdout
+# every test here spawns a fresh interpreter + 8 fake devices and compiles
+# a model from scratch: the subprocess-mesh tier (CI runs it in the
+# dedicated distributed step and the nightly slow job)
+pytestmark = pytest.mark.slow
 
 
 def test_param_shardings_resolve():
@@ -111,6 +95,7 @@ def test_compressed_allreduce():
     run_with_devices("""
         from functools import partial
         from jax.sharding import PartitionSpec as P
+        from repro.distributed.compat import shard_map
         from repro.distributed.compression import (compressed_allreduce_mean,
                                                    compress_tree,
                                                    init_error_state)
@@ -118,9 +103,8 @@ def test_compressed_allreduce():
         rng = np.random.RandomState(0)
         g = jnp.asarray(rng.randn(8, 64), jnp.float32)
 
-        f = jax.shard_map(partial(compressed_allreduce_mean, axis_name="data"),
-                          mesh=mesh, in_specs=P("data"), out_specs=P("data"),
-                          check_vma=False)
+        f = shard_map(partial(compressed_allreduce_mean, axis_name="data"),
+                      mesh=mesh, in_specs=P("data"), out_specs=P("data"))
         out = jax.jit(f)(g)
         ref = jnp.broadcast_to(jnp.mean(g, 0, keepdims=True), g.shape)
         rel = float(jnp.abs(out - ref).max() / (jnp.abs(ref).max() + 1e-9))
@@ -130,9 +114,8 @@ def test_compressed_allreduce():
         def step(err, g):
             red, err = compress_tree({"g": g}, err, "data")
             return err, red["g"]
-        f2 = jax.shard_map(lambda g: step(init_error_state({"g": g}), g)[1],
-                           mesh=mesh, in_specs=P("data"), out_specs=P("data"),
-                           check_vma=False)
+        f2 = shard_map(lambda g: step(init_error_state({"g": g}), g)[1],
+                       mesh=mesh, in_specs=P("data"), out_specs=P("data"))
         out2 = jax.jit(f2)(g)
         assert np.isfinite(np.asarray(out2)).all()
     """)

@@ -354,6 +354,7 @@ def test_submit_requires_started_service(two_precision_registry):
         svc.submit(k_lo, np.zeros((8, 8, 8), np.float32))
 
 
+@pytest.mark.slow
 def test_soak_mixed_precision_bit_exact_no_recompiles(two_precision_registry):
     """The acceptance soak: >=200 interleaved requests across 2 precisions
     and >=3 batch sizes through serving.service — bit-exact vs direct
@@ -460,6 +461,31 @@ def test_metrics_safe_during_live_traffic():
         stop.set()
         t.join()
     assert not errs, errs
+
+
+def test_latency_timestamps_monotonic_clock():
+    """Serving latency math runs on the monotonic perf_counter clock (an
+    NTP wall-clock step must not skew reported latency): submit stamps
+    never decrease across sequential requests, and every recorded
+    request latency is non-negative."""
+    assert Request(ModelKey("a", "W2A2"), None).t_submit <= time.perf_counter()
+    stamps = [Request(ModelKey("a", "W2A2"), None).t_submit
+              for _ in range(100)]
+    assert all(b >= a for a, b in zip(stamps, stamps[1:]))  # monotonic
+
+    reg = ModelRegistry()
+    key = reg.register_callable("clock", lambda reqs: [0 for _ in reqs],
+                                max_batch=4)
+    svc = InferenceService(reg, max_batch=4, max_wait_s=0.0)
+    with svc:
+        for _ in range(20):
+            svc.submit(key, None)
+        svc.drain(timeout=30)
+        lats = list(svc._latencies)
+        m = svc.metrics()
+    assert len(lats) == 20
+    assert all(dt >= 0 for dt in lats), lats
+    assert 0 <= m["latency_p50_ms"] <= m["latency_p99_ms"]
 
 
 def test_straggler_snapshot_records_events():

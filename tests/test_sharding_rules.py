@@ -21,7 +21,10 @@ BODY = """
     for multi in (False, True):
         shape = (2, 16, 16) if multi else (16, 16)
         axes = ("pod", "data", "model") if multi else ("data", "model")
-        mesh = jax.sharding.AbstractMesh(shape, axes)  # no devices needed
+        try:                                       # no devices needed
+            mesh = jax.sharding.AbstractMesh(shape, axes)      # jax >= 0.5
+        except TypeError:                          # 0.4.x: (name, size) pairs
+            mesh = jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
         sizes = dict(zip(axes, shape))
         for arch in list_archs():
             cfg = get_arch(arch).full

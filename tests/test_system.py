@@ -20,6 +20,7 @@ CFG = ModelConfig(
     remat=False, policy=QuantPolicy(mode="qat", w_bits=4, a_bits=8))
 
 
+@pytest.mark.slow
 def test_train_learns_synthetic_bigrams():
     trainer = Trainer(CFG, opt_cfg=AdamWConfig(lr=2e-3, warmup_steps=5,
                                                total_steps=60),
@@ -28,6 +29,7 @@ def test_train_learns_synthetic_bigrams():
     assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
 
 
+@pytest.mark.slow
 def test_train_with_failures_resumes_bit_exact(tmp_path):
     def run(fail):
         trainer = Trainer(CFG, opt_cfg=AdamWConfig(lr=1e-3, warmup_steps=5,
@@ -45,6 +47,7 @@ def test_train_with_failures_resumes_bit_exact(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_server_greedy_matches_manual_decode():
     from repro.models.transformer import (decode_step, init_params,
                                           pack_params, prefill)
@@ -89,6 +92,7 @@ def test_serving_quantized_vs_float_tokens_overlap():
     assert agree >= 0.5, agree
 
 
+@pytest.mark.slow
 def test_controller_runs_resnet9_stream():
     """The Pito-analogue executes the generated command stream on real
     tensors (conv jobs via the serial path)."""
