@@ -8,10 +8,11 @@ overhead) to ``BENCH_compile.json``; the serving-runtime rows (bucketed
 steady-state vs re-jit-per-shape, latency percentiles, precision mix) to
 ``BENCH_serving.json``; the bank-scaling rows (1 vs 4 MVU banks, virtual
 + wall domains, sharded/pipelined placements) to
-``BENCH_distributed.json``.
+``BENCH_distributed.json``; the AOT artifact-store rows (cold compile vs
+warm boot of a 2-model x 2-precision registry) to ``BENCH_coldstart.json``.
 
 Run: PYTHONPATH=src python -m benchmarks.run
-     [--only kernels,tables,conv,compile,serving,distributed]
+     [--only kernels,tables,conv,compile,serving,distributed,coldstart]
      [--json BENCH_kernels.json] [--conv-json BENCH_conv.json]
      [--compile-json BENCH_compile.json]
      [--serving-json BENCH_serving.json]
@@ -32,7 +33,7 @@ _ROWS: dict = {}
 # per-group artifact keys: group tag -> row names (dumped to the group's
 # own BENCH_*.json next to the all-rows dump)
 _GROUP_KEYS: dict = {"conv": [], "compile": [], "serving": [],
-                     "distributed": []}
+                     "distributed": [], "coldstart": []}
 
 
 def _emit(name: str, us: float, derived: str = "",
@@ -520,13 +521,13 @@ def bench_quantized_lm_serve():
           f"{ntok/dt:.1f} tok/s (smoke cfg, CPU)")
 
 
-def _serving_bench_graph():
+def _serving_bench_graph(name="serving_cnn", seed=0):
     """Small two-serial-layer CNN: cheap to compile at several precisions,
     still exercises the packed conv + gemm serving kernels."""
     from repro.compiler import Graph, Node
-    rng = np.random.RandomState(0)
+    rng = np.random.RandomState(seed)
     g = Graph(
-        "serving_cnn", {"x": (None, 8, 8, 8)}, ["y"],
+        name, {"x": (None, 8, 8, 8)}, ["y"],
         [Node("c1", "conv2d", ["x", "c1.w"], "c1.y",
               {"stride": 1, "padding": 1}),
          Node("c1.relu", "relu", ["c1.y"], "c1.r"),
@@ -615,6 +616,78 @@ def bench_serving():
     _emit("bench_serving_queue", 0,
           f"peak depth {m['peak_queue_depth']}; "
           f"straggler events {m['straggler']['events']}", group="serving")
+
+
+def bench_coldstart():
+    """AOT artifact store: cold compile vs warm boot of a 2-model x
+    2-precision registry.
+
+    Cold = a fresh registry materializing all 4 variants through
+    ``compile_graph`` (passes + calibration + packing + autotuning),
+    persisting each to an artifact store. Warm = a restarted process (fresh
+    registry, fresh graph objects, empty tuner L1) pointed at the same
+    store: ``warm_boot()`` must restore every variant with **zero**
+    compiles and zero autotuner enumerations, serve bit-exact, and be
+    >=5x faster than the cold path (the CI gate)."""
+    import shutil
+    import tempfile
+    from repro.kernels import tuning
+    from repro.models.layers import QuantPolicy
+    from repro.serving import ModelRegistry
+
+    pols = [QuantPolicy(mode="serial", w_bits=2, a_bits=2, radix_bits=7),
+            QuantPolicy(mode="serial", w_bits=4, a_bits=8, radix_bits=7)]
+
+    def register_all(reg):
+        # fresh graph objects each time — compiling annotates a graph in
+        # place, and a restarted process never sees the annotated one
+        keys = []
+        for name, seed in (("cold_a", 0), ("cold_b", 7)):
+            g, calib = _serving_bench_graph(name, seed)
+            keys += [reg.register_graph(name, g, calib, p) for p in pols]
+        return keys
+
+    root = tempfile.mkdtemp(prefix="coldstart_store_")
+    x = np.random.RandomState(3).rand(2, 8, 8, 8).astype(np.float32)
+    try:
+        tuning.clear_cache()
+        reg = ModelRegistry(store=root)
+        keys = register_all(reg)
+        t0 = time.perf_counter()
+        outs = {str(k): np.asarray(reg.program(k)(x)) for k in keys}
+        dt_cold = time.perf_counter() - t0
+        _emit("bench_coldstart_cold_compile", dt_cold * 1e6,
+              f"{len(keys)} variants (2 models x 2 precisions); "
+              f"compiles={reg.compiles}", group="coldstart")
+
+        tuning.clear_cache()                 # a restart has an empty L1
+        reg2 = ModelRegistry(store=root)
+        keys2 = register_all(reg2)
+        t0 = time.perf_counter()
+        report = reg2.warm_boot()
+        dt_warm = time.perf_counter() - t0
+        enums = tuning.cache_info()["enumerations"]
+        exact = all(np.array_equal(outs[str(k)],
+                                   np.asarray(reg2.program(k)(x)))
+                    for k in keys2)
+        _emit("bench_coldstart_warm_boot", dt_warm * 1e6,
+              f"restored={len(report['restored'])} "
+              f"recompiles_after_warm_boot={reg2.compiles} "
+              f"autotuner_enumerations={enums} bit_exact={exact}",
+              group="coldstart")
+        _emit("bench_coldstart_speedup", 0,
+              f"{dt_cold/dt_warm:.1f}x warm boot vs cold compile "
+              f"(>=5x required)", group="coldstart")
+        st = reg2.store.stats()
+        _emit("bench_coldstart_store", 0,
+              f"programs={st['programs']} blobs={st['blobs']} "
+              f"bytes_on_disk={st['bytes_on_disk']} "
+              f"dedup_ratio={st['dedup_ratio']} "
+              f"load_p50_ms={st['load_p50_ms']}", group="coldstart")
+    finally:
+        tuning.set_persistent_store(None)
+        tuning.clear_cache()
+        shutil.rmtree(root, ignore_errors=True)
 
 
 def bench_distributed():
@@ -722,6 +795,7 @@ GROUPS = {
     "serve": [bench_quantized_lm_serve],
     "serving": [bench_serving],
     "distributed": [bench_distributed],
+    "coldstart": [bench_coldstart],
     "roofline": [roofline_summary],
 }
 
@@ -746,6 +820,9 @@ def main(argv=None) -> None:
     ap.add_argument("--distributed-json", default="BENCH_distributed.json",
                     help="path for the bank-scaling rows dump "
                          "('' disables)")
+    ap.add_argument("--coldstart-json", default="BENCH_coldstart.json",
+                    help="path for the artifact warm-boot rows dump "
+                         "('' disables)")
     args = ap.parse_args(argv)
     groups = list(GROUPS) if not args.only else [
         g.strip() for g in args.only.split(",") if g.strip()]
@@ -763,7 +840,8 @@ def main(argv=None) -> None:
         print(f"# wrote {len(_ROWS)} rows to {args.json}")
     group_paths = {"conv": args.conv_json, "compile": args.compile_json,
                    "serving": args.serving_json,
-                   "distributed": args.distributed_json}
+                   "distributed": args.distributed_json,
+                   "coldstart": args.coldstart_json}
     for grp, path in group_paths.items():
         keys = _GROUP_KEYS[grp]
         if not path or not keys:

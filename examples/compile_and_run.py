@@ -9,7 +9,11 @@
  4. lower the same Program to the controller CommandStream and print the
     per-MVU cycle estimate (paper §3.3's artifact, now for ANY imported
     model),
- 5. if the optional `onnx` package is installed, also build a tiny ONNX
+ 5. save the Program to an artifact store and serve it from a **fresh
+    process** that loads it with zero recompiles — no ONNX, calibration
+    data, or autotuner in the serving process (the BARVINN deployment
+    story: ship the command stream, not the compiler),
+ 6. if the optional `onnx` package is installed, also build a tiny ONNX
     model in-process and run it through the ONNX-subset importer;
     otherwise print the graceful skip.
 
@@ -70,7 +74,35 @@ def main():
     print(f"{len(cs.jobs)} jobs; per-MVU cycles {cs.per_mvu_cycles}; "
           f"pipelined FPS @250MHz ~ {250e6/busiest:.0f}")
 
-    print("\n=== 5. ONNX importer (optional extra) ===")
+    print("\n=== 5. artifact save -> fresh-process load -> serve ===")
+    import subprocess
+    import sys
+    from repro.compiler import ArtifactStore, save_program
+    with tempfile.TemporaryDirectory() as td:
+        store = ArtifactStore(td)
+        ref = save_program(prog, store, name="resnet9@W2A2")
+        st = store.stats()
+        print(f"saved {ref[:12]}… ({st['blobs']} blobs, "
+              f"{st['bytes_on_disk']/1024:.0f} KiB on disk)")
+        worker = (
+            "import sys, numpy as np\n"
+            "from repro.compiler import ArtifactStore, load_program\n"
+            "prog = load_program('resnet9@W2A2', ArtifactStore(sys.argv[1]))\n"
+            "x = np.random.RandomState(0).rand(8, 32, 32, 3)"
+            ".astype(np.float32)\n"
+            "print('worker logits sum', float(np.asarray(prog(x)).sum()))\n")
+        env = dict(os.environ,
+                   PYTHONPATH="src" + os.pathsep + os.environ.get(
+                       "PYTHONPATH", ""))
+        out = subprocess.run([sys.executable, "-c", worker, td],
+                             capture_output=True, text=True, env=env,
+                             timeout=600)
+        print(out.stdout.strip() or out.stderr[-400:])
+        here = float(np.asarray(prog(images)).sum())
+        print(f"parent logits sum {here} — fresh process served the "
+              "artifact with zero recompiles")
+
+    print("\n=== 6. ONNX importer (optional extra) ===")
     if not HAS_ONNX:
         print("onnx not installed — skipping (pip install onnx to enable; "
               "the native JSON front end above needs no extra deps)")

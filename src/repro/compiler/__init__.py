@@ -9,9 +9,14 @@ format and generates an executable command stream" — as a real subsystem:
   epilogue fusion, precision annotation, dead-node elimination,
 * :mod:`repro.compiler.lower` — calibration + AOT weight packing + tile
   autotuning → executable :class:`Program` (+ CommandStream linkage),
-* :mod:`repro.compiler.executor` — single-jit Program execution.
+* :mod:`repro.compiler.executor` — single-jit Program execution,
+* :mod:`repro.compiler.artifact` — versioned content-addressed on-disk
+  Program artifacts (compile once, warm-boot from disk).
 """
 
+from repro.compiler.artifact import (ArtifactError, ArtifactStore,
+                                     array_digest, load_program,
+                                     recipe_digest, save_program)
 from repro.compiler.ir import (Graph, GraphError, Node, UnsupportedOpError,
                                graph_from_dict, graph_from_json,
                                graph_to_dict, graph_to_json)
@@ -25,6 +30,8 @@ __all__ = [
     "Graph", "Node", "GraphError", "UnsupportedOpError",
     "graph_from_dict", "graph_to_dict", "graph_from_json", "graph_to_json",
     "Program", "Step", "compile_graph",
+    "ArtifactError", "ArtifactStore", "array_digest", "save_program",
+    "load_program", "recipe_digest",
     "HAS_ONNX", "import_onnx",
     "infer_shapes", "fold_constants", "fuse_epilogues",
     "annotate_precision", "eliminate_dead", "run_pipeline",

@@ -383,7 +383,11 @@ def compile_graph(g: Graph, calib, *,
     meta: Dict = {"tiles": {}, "formats": {},
                   # per-example input shape: the serving runtime's bucketed
                   # runner warms its padding buckets from this
-                  "input_shape": tuple(int(d) for d in calib.shape[1:])}
+                  "input_shape": tuple(int(d) for d in calib.shape[1:]),
+                  # the quant policy that drove annotation — part of the
+                  # on-disk artifact (compiler/artifact.py), so a loaded
+                  # Program still knows what precision it embodies
+                  "policy": dataclasses.asdict(policy)}
     # tensor -> ("float",) | ("codes"|"packed", alpha_key, bits, signed)
     fmt: Dict[str, Tuple] = {input_name: ("float",)}
 

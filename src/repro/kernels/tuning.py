@@ -13,6 +13,13 @@ fit.
 Selection is pure arithmetic (no compilation, no device), deterministic,
 and memoized in an in-process cache so a serving loop pays the enumeration
 once per (shape, spec) and every later call is a dict hit.
+
+The in-process LRU is the L1; :func:`set_persistent_store` attaches an
+:class:`~repro.compiler.artifact.ArtifactStore` as an L2, persisting every
+decision (keyed by shape/precision/backend knobs) so restarts never re-run
+the enumeration and tuning is deterministic across boots.
+``cache_info()['enumerations']`` counts actual enumerations — the counter
+warm-boot tests assert stays at zero.
 """
 
 from __future__ import annotations
@@ -29,7 +36,8 @@ from repro.core.cost_model import (TPUConfig, conv_kernel_cost,
                                    kernel_vmem_bytes)
 
 __all__ = ["TileConfig", "choose_tile", "ConvTileConfig", "choose_conv_tile",
-           "clear_cache", "cache_info", "set_cache_limit"]
+           "clear_cache", "cache_info", "set_cache_limit",
+           "set_persistent_store"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,7 +70,48 @@ _CACHE_LIMIT_DEFAULT = 4096
 _cache: "collections.OrderedDict" = collections.OrderedDict()
 _cache_lock = threading.Lock()
 _cache_limit = _CACHE_LIMIT_DEFAULT
-_cache_stats = {"hits": 0, "misses": 0, "evictions": 0}
+_cache_stats = {"hits": 0, "misses": 0, "evictions": 0,
+                "persist_hits": 0, "enumerations": 0}
+# L2: a persistent ArtifactStore consulted on L1 misses and written on
+# every fresh enumeration (see set_persistent_store)
+_persist = None
+
+
+def set_persistent_store(store):
+    """Attach (or with ``None`` detach) a persistent L2 tuning store — an
+    :class:`~repro.compiler.artifact.ArtifactStore` (or anything with its
+    ``tuning_get``/``tuning_put`` contract). Returns the previous store so
+    callers/tests can restore it."""
+    global _persist
+    with _cache_lock:
+        old, _persist = _persist, store
+    return old
+
+
+def _persist_lookup(key, cls):
+    """L2 consult: decode a persisted decision for ``key``, or None."""
+    with _cache_lock:
+        store = _persist
+    if store is None:
+        return None
+    rec = store.tuning_get(repr(key))
+    if rec is None:
+        return None
+    try:
+        cfg = cls(**rec["config"])
+    except (KeyError, TypeError):
+        return None              # stale/foreign record: just re-tune
+    with _cache_lock:
+        _cache_stats["persist_hits"] += 1
+    return cfg
+
+
+def _persist_record(key, kind, cfg) -> None:
+    with _cache_lock:
+        store = _persist
+        _cache_stats["enumerations"] += 1
+    if store is not None:
+        store.tuning_put(repr(key), kind, dataclasses.asdict(cfg))
 
 
 def _cache_get(key):
@@ -128,6 +177,10 @@ def choose_tile(m: int, k: int, n: int, spec: SerialSpec, *,
     hit = _cache_get(key)
     if hit is not None:
         return hit
+    persisted = _persist_lookup(key, TileConfig)
+    if persisted is not None:
+        _cache_put(key, persisted)
+        return persisted
 
     nd_a = bitops.num_digits(spec.a_bits, spec.radix_bits, spec.a_signed)
     nd_w = bitops.num_digits(spec.w_bits, spec.radix_bits, spec.w_signed)
@@ -157,6 +210,7 @@ def choose_tile(m: int, k: int, n: int, spec: SerialSpec, *,
         best = TileConfig(_BM_CANDIDATES[0], _BN_CANDIDATES[0],
                           _BK_CANDIDATES[0], False, False, float("inf"),
                           0)
+    _persist_record(key, "tile", best)
     _cache_put(key, best)
     return best
 
@@ -204,6 +258,10 @@ def choose_conv_tile(n: int, h: int, w: int, ci: int, co: int, *,
     hit = _cache_get(key)
     if hit is not None:
         return hit
+    persisted = _persist_lookup(key, ConvTileConfig)
+    if persisted is not None:
+        _cache_put(key, persisted)
+        return persisted
 
     nd_a = bitops.num_digits(spec.a_bits, spec.radix_bits, spec.a_signed)
     nd_w = bitops.num_digits(spec.w_bits, spec.radix_bits, spec.w_signed)
@@ -235,6 +293,7 @@ def choose_conv_tile(n: int, h: int, w: int, ci: int, co: int, *,
     if best is None:  # degenerate: nothing fit the budget — smallest tile
         best = ConvTileConfig(fix_bco or _BCO_CANDIDATES[0], fix_bnb or 1,
                               False, False, float("inf"), 0)
+    _persist_record(key, "conv_tile", best)
     _cache_put(key, best)
     return best
 
@@ -249,4 +308,4 @@ def clear_cache() -> None:
 def cache_info() -> dict:
     with _cache_lock:
         return {"entries": len(_cache), "limit": _cache_limit,
-                **_cache_stats}
+                "persistent_store": _persist is not None, **_cache_stats}

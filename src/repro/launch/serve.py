@@ -158,37 +158,59 @@ class CNNServer:
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first):
     ``placement="banked"`` load-balances micro-batches across banks,
     ``"sharded"`` splits each micro-batch evenly over all of them.
+
+    ``store`` (an :class:`~repro.compiler.ArtifactStore` or directory
+    path) warm-boots compiles from disk and persists fresh ones;
+    ``artifact="model@precision"`` serves a precompiled artifact by its
+    store tag with **no** graph, calibration data, or autotuner at all —
+    the BARVINN fleet story: ship the command stream, not the compiler.
     """
 
     def __init__(self, graph=None, *, calib=None, seed: int = 0,
                  calib_batch: int = 8, backend: str = "xla",
                  interpret: bool = False, policy=None, max_batch: int = 32,
                  max_wait_s: float = 0.0, n_banks: Optional[int] = None,
-                 placement: str = "banked"):
-        from repro.models.layers import QuantPolicy
-        from repro.models.resnet import (ResNet9Config, resnet9_graph,
-                                         resnet9_init)
+                 placement: str = "banked", store=None,
+                 artifact: Optional[str] = None):
         from repro.serving import InferenceService, ModelRegistry
-        if graph is None:
-            cfg = ResNet9Config()
-            params = resnet9_init(jax.random.PRNGKey(seed), cfg)
-            graph = resnet9_graph(params, cfg)
+        if artifact is not None:
+            # fleet path: serve a precompiled artifact by its store tag —
+            # no graph construction, no calibration data, no autotuner
+            if store is None:
+                raise ValueError("artifact=... requires store=")
+            model, _, prec = artifact.partition("@")
+            if not prec:
+                raise ValueError(f"artifact must be 'model@precision', "
+                                 f"got {artifact!r}")
+            self.graph = None
+            self.registry = ModelRegistry(backend=backend,
+                                          interpret=interpret, store=store)
+            self.key = self.registry.register_artifact(model, precision=prec)
+        else:
+            from repro.models.layers import QuantPolicy
+            from repro.models.resnet import (ResNet9Config, resnet9_graph,
+                                             resnet9_init)
+            if graph is None:
+                cfg = ResNet9Config()
+                params = resnet9_init(jax.random.PRNGKey(seed), cfg)
+                graph = resnet9_graph(params, cfg)
+                if policy is None:
+                    policy = QuantPolicy(mode="serial", w_bits=cfg.w_bits,
+                                         a_bits=cfg.a_bits,
+                                         radix_bits=cfg.radix_bits)
             if policy is None:
-                policy = QuantPolicy(mode="serial", w_bits=cfg.w_bits,
-                                     a_bits=cfg.a_bits,
-                                     radix_bits=cfg.radix_bits)
-        if policy is None:
-            policy = QuantPolicy(mode="serial", w_bits=2, a_bits=2,
-                                 radix_bits=7)
-        if calib is None:
-            in_shape = next(iter(graph.inputs.values()))
-            calib = jax.random.uniform(
-                jax.random.PRNGKey(seed + 1),
-                (calib_batch,) + tuple(int(d) for d in in_shape[1:]))
-        self.graph = graph
-        self.registry = ModelRegistry(backend=backend, interpret=interpret)
-        self.key = self.registry.register_graph(graph.name or "cnn", graph,
-                                                calib, policy)
+                policy = QuantPolicy(mode="serial", w_bits=2, a_bits=2,
+                                     radix_bits=7)
+            if calib is None:
+                in_shape = next(iter(graph.inputs.values()))
+                calib = jax.random.uniform(
+                    jax.random.PRNGKey(seed + 1),
+                    (calib_batch,) + tuple(int(d) for d in in_shape[1:]))
+            self.graph = graph
+            self.registry = ModelRegistry(backend=backend,
+                                          interpret=interpret, store=store)
+            self.key = self.registry.register_graph(graph.name or "cnn",
+                                                    graph, calib, policy)
         self.service = InferenceService(
             self.registry, max_batch=max_batch, max_wait_s=max_wait_s,
             n_banks=n_banks, placement=placement)
@@ -198,6 +220,11 @@ class CNNServer:
     def program(self):
         """The compiled Program (lazy — first access compiles)."""
         return self.registry.program(self.key)
+
+    def warm_boot(self) -> dict:
+        """Restore every variant from the artifact store and pre-jit its
+        padding buckets (see :meth:`InferenceService.warm_boot`)."""
+        return self.service.warm_boot()
 
     def classify(self, images) -> np.ndarray:
         """Logits for a batch of images (NHWC float): per-image requests
@@ -239,7 +266,15 @@ def _main_cnn(args, cfg) -> None:
         print(f"note: --placement {args.placement} has no effect without "
               "--banks N (serving single-device)")
     server = CNNServer(backend=backend, interpret=args.interpret,
-                       n_banks=args.banks, placement=args.placement)
+                       n_banks=args.banks, placement=args.placement,
+                       store=args.store, artifact=args.artifact)
+    if args.store:
+        t0 = time.perf_counter()
+        report = server.warm_boot()
+        print(f"warm boot in {(time.perf_counter()-t0)*1e3:.0f}ms: "
+              f"restored={report['restored']} "
+              f"compiled={report['compiled']} "
+              f"bucket_compiles={report['bucket_compiles']}")
     if args.banks and args.banks > 1:
         print(f"serving across {server.service.n_banks} MVU banks "
               f"(placement={server.service.placement})")
@@ -262,11 +297,95 @@ def _main_cnn(args, cfg) -> None:
         print(f"banks: util={sched['bank_utilization']} "
               f"requests={sched['bank_requests']} "
               f"replica_cache={m['banks']['replica_cache']}")
+    if args.store:
+        st = m["artifact_store"]
+        print(f"artifact store: hits={st['hits']} misses={st['misses']} "
+              f"loads={st['loads']} load_p50={st['load_p50_ms']}ms "
+              f"bytes_on_disk={st['bytes_on_disk']} "
+              f"dedup_ratio={st['dedup_ratio']}")
     print(server.cycle_report())
     server.close()
 
 
+def _parse_precisions(spec: Optional[str], cfg) -> list:
+    """``"W2A2,W8A8"`` → [(2, 8), ...]; default: the arch's own policy."""
+    import re
+    if not spec:
+        return [(int(cfg.w_bits), int(cfg.a_bits))]
+    out = []
+    for tok in spec.split(","):
+        m = re.fullmatch(r"[Ww](\d+)[Aa](\d+)", tok.strip())
+        if not m:
+            raise SystemExit(f"bad precision {tok!r} — expected e.g. W2A2")
+        out.append((int(m.group(1)), int(m.group(2))))
+    return out
+
+
+def _main_compile(argv) -> None:
+    """The offline BARVINN "code generator" run: graph → passes →
+    calibration → packing → autotuning → artifact store. A serving
+    process pointed at ``--store`` then boots with zero recompiles and
+    needs neither ONNX nor calibration data nor the autotuner."""
+    from repro.models.layers import QuantPolicy
+    from repro.models.resnet import (ResNet9Config, resnet9_graph,
+                                     resnet9_init)
+    from repro.serving import ModelRegistry
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.serve compile",
+        description="AOT-compile an arch into an artifact store")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--store", required=True,
+                    help="artifact store directory (created if missing)")
+    ap.add_argument("--precisions", default=None,
+                    help="comma-separated variants, e.g. W2A2,W8A8 "
+                         "(default: the arch policy)")
+    ap.add_argument("--backend", default="xla",
+                    choices=["xla", "pallas_v2"])
+    ap.add_argument("--interpret", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--calib-batch", type=int, default=8)
+    args = ap.parse_args(argv)
+    cfg = get_arch(args.arch).smoke
+    if getattr(cfg, "family", None) != "cnn":
+        raise SystemExit(f"compile: arch {args.arch!r} is not a CNN — only "
+                         "graph-compiled archs produce Program artifacts")
+    # the arch entry is a registry sentinel; the graph comes from the real
+    # CNN config, exactly as CNNServer builds it
+    mcfg = ResNet9Config()
+    params = resnet9_init(jax.random.PRNGKey(args.seed), mcfg)
+    graph = resnet9_graph(params, mcfg)
+    in_shape = next(iter(graph.inputs.values()))
+    calib = jax.random.uniform(
+        jax.random.PRNGKey(args.seed + 1),
+        (args.calib_batch,) + tuple(int(d) for d in in_shape[1:]))
+    registry = ModelRegistry(backend=args.backend,
+                             interpret=args.interpret, store=args.store)
+    for w_bits, a_bits in _parse_precisions(args.precisions, mcfg):
+        policy = QuantPolicy(mode="serial", w_bits=w_bits, a_bits=a_bits,
+                             radix_bits=mcfg.radix_bits)
+        key = registry.register_graph(graph.name or "cnn", graph, calib,
+                                      policy)
+        hits0 = registry.artifact_hits
+        t0 = time.perf_counter()
+        registry.program(key)   # store hit or compile+save
+        dt = time.perf_counter() - t0
+        e = registry.entry(key)
+        how = ("store hit" if registry.artifact_hits > hits0
+               else "compiled")
+        print(f"{key}: {e.ref[:12]}… ({how}) in {dt*1e3:.0f}ms")
+    st = registry.store.stats()
+    print(f"store {args.store}: programs={st['programs']} "
+          f"blobs={st['blobs']} bytes_on_disk={st['bytes_on_disk']} "
+          f"dedup_ratio={st['dedup_ratio']}")
+
+
 def main():
+    import sys
+    if len(sys.argv) > 1 and sys.argv[1] == "compile":
+        # offline code-generator run (kept out of argparse subparsers so
+        # the plain `--arch ...` serving invocation stays unchanged)
+        _main_compile(sys.argv[2:])
+        return
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--batch", type=int, default=4)
@@ -286,11 +405,23 @@ def main():
                     help="multi-bank placement: load-balance whole "
                          "micro-batches (banked) or split each across "
                          "all banks (sharded)")
+    ap.add_argument("--store", default=None,
+                    help="artifact store directory: warm-boot compiled "
+                         "Programs from disk, persist fresh compiles "
+                         "(populate offline with the `compile` subcommand)")
+    ap.add_argument("--artifact", default=None, metavar="MODEL@PRECISION",
+                    help="serve a precompiled artifact by its store tag "
+                         "(requires --store; CNN path; skips graph build, "
+                         "calibration, and the autotuner entirely)")
     args = ap.parse_args()
+    if args.artifact and not args.store:
+        ap.error("--artifact requires --store")
     cfg = get_arch(args.arch).smoke
     if getattr(cfg, "family", None) == "cnn":
         _main_cnn(args, cfg)  # compiled graph path (the CNN default)
         return
+    if args.store or args.artifact:
+        print("note: --store/--artifact apply to compiled CNN archs only")
     server = Server(cfg, batch_slots=args.batch, max_len=64,
                     quantized=not args.no_quant, backend=args.backend,
                     interpret=args.interpret or None)

@@ -6,7 +6,9 @@ concurrently from one process, the way the paper's runtime-programmable
 fabric runs mixed-precision networks without reconfiguration.
 
 * :mod:`repro.serving.registry`  — model/precision registry: lazy compile,
-  LRU eviction, content-addressed packed-weight sharing.
+  LRU eviction, content-addressed packed-weight sharing, and (with
+  ``store=``) AOT artifact warm boot — zero recompiles on restart
+  (:mod:`repro.compiler.artifact`).
 * :mod:`repro.serving.batcher`   — request queue + dynamic micro-batcher
   with power-of-two padding buckets and backpressure.
 * :mod:`repro.serving.scheduler` — MVU-slot admission in the cycle domain

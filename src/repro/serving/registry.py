@@ -18,7 +18,17 @@ precisions, with:
   layers;
 * **LRU eviction** — at most ``max_programs`` compiled graph entries stay
   resident; evicted ones recompile transparently on next use (pinned
-  Programs and opaque callables are never evicted).
+  Programs and opaque callables are never evicted);
+* **artifact store** — with ``store=`` (an
+  :class:`~repro.compiler.artifact.ArtifactStore` or a directory path),
+  ``program()`` consults the store *before* ``compile_graph`` (keyed by
+  :func:`~repro.compiler.artifact.recipe_digest`), freshly compiled
+  Programs are saved + tagged ``model@precision``, eviction spills to a
+  disk reference so re-admission is a load rather than a recompile, and
+  :meth:`warm_boot` restores every variant with zero recompiles. Attaching
+  a store also routes :mod:`repro.kernels.tuning` persistence through it,
+  so warm boots skip the autotuner too. Fleet processes with no compile
+  recipe at all register through :meth:`register_artifact`.
 
 Opaque engines (e.g. the autoregressive LM server, whose serving loop is
 not a single Program call) register through :meth:`register_callable` and
@@ -29,7 +39,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import hashlib
 import threading
 import weakref
 from typing import Callable, Dict, List, Optional
@@ -68,6 +77,8 @@ class _Entry:
     fn: Optional[Callable] = None   # callable entries: opaque batch engine
     stream: object = None           # optional CommandStream for scheduling
     max_batch: Optional[int] = None  # per-entry cap (callable engines)
+    recipe: Optional[str] = None    # recipe_digest (graph entries w/ store)
+    ref: Optional[str] = None       # artifact ref once saved/registered
 
 
 class ModelRegistry:
@@ -79,10 +90,20 @@ class ModelRegistry:
     """
 
     def __init__(self, *, max_programs: Optional[int] = None,
-                 backend: str = "xla", interpret: bool = False):
+                 backend: str = "xla", interpret: bool = False,
+                 store=None):
         self.backend = backend
         self.interpret = interpret
         self.max_programs = max_programs
+        if isinstance(store, str):
+            from repro.compiler.artifact import ArtifactStore
+            store = ArtifactStore(store)
+        self.store = store
+        if store is not None:
+            # L2 for the autotuner: restarts with the same store never
+            # re-enumerate tile configs (kernels/tuning keeps its L1 LRU)
+            from repro.kernels import tuning
+            tuning.set_persistent_store(store)
         self._entries: Dict[ModelKey, _Entry] = {}
         # compiled graph-entry Programs only, LRU order (pinned Programs
         # live in their _Entry and never evict)
@@ -97,6 +118,9 @@ class ModelRegistry:
         self.evictions = 0
         self.shared_arrays = 0
         self.shared_bytes = 0
+        self.artifact_hits = 0    # compiles avoided by a store load
+        self.artifact_saves = 0   # programs written to the store
+        self.artifact_spills = 0  # evictions that left a disk reference
 
     # -------------------------------------------------------- registration
     def register_graph(self, model: str, graph, calib, policy, *,
@@ -111,13 +135,42 @@ class ModelRegistry:
         packed planes on device.
         """
         key = ModelKey(model, precision or precision_label(policy))
+        e = _Entry(
+            "graph", graph=graph, calib=calib, policy=policy,
+            per_layer=per_layer,
+            backend=self.backend if backend is None else backend,
+            interpret=self.interpret if interpret is None else interpret)
+        if self.store is not None:
+            from repro.compiler.artifact import recipe_digest
+            e.recipe = recipe_digest(graph, calib, policy,
+                                     per_layer=per_layer,
+                                     backend=e.backend,
+                                     interpret=e.interpret)
         with self._lock:
             self._check_new(key)
-            self._entries[key] = _Entry(
-                "graph", graph=graph, calib=calib, policy=policy,
-                per_layer=per_layer,
-                backend=self.backend if backend is None else backend,
-                interpret=self.interpret if interpret is None else interpret)
+            self._entries[key] = e
+        return key
+
+    def register_artifact(self, model: str, *, precision: str,
+                          ref: Optional[str] = None) -> ModelKey:
+        """Register a variant backed *only* by a stored artifact — the
+        fleet path: no graph, no calibration data, no compiler run. ``ref``
+        defaults to the store's ``model@precision`` name tag."""
+        from repro.compiler.artifact import ArtifactError
+        if self.store is None:
+            raise ValueError("register_artifact requires a registry store")
+        key = ModelKey(model, precision)
+        if ref is None:
+            ref = self.store.resolve(str(key))
+            if ref is None:
+                raise ArtifactError(
+                    f"no artifact tagged {key} in store {self.store.root} "
+                    f"(tags: {sorted(self.store.tags())})")
+        if not self.store.has_program(ref):
+            raise ArtifactError(f"unknown program ref {ref[:12]}… for {key}")
+        with self._lock:
+            self._check_new(key)
+            self._entries[key] = _Entry("artifact", ref=ref)
         return key
 
     def register_program(self, model: str, program, *,
@@ -157,29 +210,89 @@ class ModelRegistry:
                            f"{[str(k) for k in self._entries]}") from None
 
     def program(self, key: ModelKey):
-        """The compiled Program for ``key`` (lazy compile + LRU touch)."""
+        """The compiled Program for ``key`` (lazy materialize + LRU touch).
+
+        Materialization order: resident LRU hit → artifact-store load (by
+        prior ref, then by recipe digest) → ``compile_graph``. A fresh
+        compile is saved back to the store (when one is attached) and
+        tagged ``model@precision``, so every later eviction re-admits via
+        a disk load instead of a recompile."""
         with self._lock:
             e = self.entry(key)
             if e.kind == "program":
                 return e.program
-            if e.kind != "graph":
+            if e.kind not in ("graph", "artifact"):
                 raise TypeError(f"{key} is an opaque engine, not a Program")
             prog = self._lru.get(key)
             if prog is not None:
                 self._lru.move_to_end(key)
                 return prog
-            from repro.compiler import compile_graph
-            prog = compile_graph(e.graph, e.calib, policy=e.policy,
-                                 per_layer=e.per_layer, backend=e.backend,
-                                 interpret=e.interpret)
-            self.compiles += 1
+            prog = self._materialize(key, e)
             self._share_packed(prog)
             self._lru[key] = prog
             while (self.max_programs is not None
                    and len(self._lru) > self.max_programs):
-                self._lru.popitem(last=False)
+                old_key, _ = self._lru.popitem(last=False)
                 self.evictions += 1
+                oe = self._entries.get(old_key)
+                if oe is not None and oe.ref is not None:
+                    self.artifact_spills += 1
             return prog
+
+    def _materialize(self, key: ModelKey, e: _Entry):
+        """Load from the store if possible, else compile (and save)."""
+        if self.store is not None:
+            from repro.compiler.artifact import ArtifactError, load_program
+            for ref in (e.ref,
+                        self.store.resolve(f"recipe:{e.recipe}")
+                        if e.recipe is not None else None):
+                if ref is None:
+                    continue
+                try:
+                    prog = load_program(ref, self.store)
+                except ArtifactError:
+                    if e.kind == "artifact":
+                        raise   # no recipe to fall back on — surface it
+                    continue    # stale/corrupt ref: fall through to compile
+                e.ref = ref
+                self.artifact_hits += 1
+                self.store._note_hit()
+                return prog
+            self.store._note_miss()
+        if e.kind == "artifact":
+            from repro.compiler.artifact import ArtifactError
+            raise ArtifactError(f"{key} is artifact-backed but has no "
+                                f"loadable artifact (store missing?)")
+        from repro.compiler import compile_graph
+        prog = compile_graph(e.graph, e.calib, policy=e.policy,
+                             per_layer=e.per_layer, backend=e.backend,
+                             interpret=e.interpret)
+        self.compiles += 1
+        if self.store is not None:
+            from repro.compiler.artifact import save_program
+            e.ref = save_program(prog, self.store, name=str(key))
+            if e.recipe is not None:
+                self.store.tag(f"recipe:{e.recipe}", e.ref)
+            self.artifact_saves += 1
+        return prog
+
+    def warm_boot(self) -> Dict:
+        """Materialize every graph/artifact variant up front, preferring
+        the artifact store — the serving cold-start killer. With a fully
+        populated store this performs **zero** ``compile_graph`` (and,
+        via persisted tuning, zero autotuner enumerations). Returns
+        ``{"restored": [...], "compiled": [...]}`` by variant name."""
+        restored: List[str] = []
+        compiled: List[str] = []
+        for key in self.keys():
+            e = self.entry(key)
+            if e.kind not in ("graph", "artifact"):
+                continue
+            before = self.compiles
+            self.program(key)
+            (compiled if self.compiles > before
+             else restored).append(str(key))
+        return {"restored": restored, "compiled": compiled}
 
     def resident_program(self, key: ModelKey):
         """The cached Program if (and only if) resident — never compiles.
@@ -207,6 +320,7 @@ class ModelRegistry:
         w_signed) — activation precision never enters — so the digest of
         the packed bytes is a sound sharing key across precisions/models.
         """
+        from repro.compiler.artifact import array_digest
         params = getattr(program, "params", None)
         if not params:
             return
@@ -214,14 +328,15 @@ class ModelRegistry:
             arr = p.get("w_packed")
             if arr is None:
                 continue
-            a = np.asarray(arr)
-            digest = hashlib.sha1(
-                a.tobytes() + str((a.shape, a.dtype)).encode()).hexdigest()
+            # same digest as the artifact store's blob key, so "held once
+            # on device" and "stored once on disk" coincide — a Program
+            # loaded from disk re-shares planes with resident siblings here
+            digest = array_digest(arr)
             hit = self._pack_cache.get(digest)
             if hit is not None and hit is not arr:
                 p["w_packed"] = hit   # drop the duplicate device buffer
                 self.shared_arrays += 1
-                self.shared_bytes += a.nbytes
+                self.shared_bytes += np.asarray(arr).nbytes
             elif hit is None:
                 try:
                     self._pack_cache[digest] = arr
@@ -244,4 +359,9 @@ class ModelRegistry:
                 # cache (distributed/program_parallel) keys off these
                 # shared objects, so one entry = one plane per device
                 "pack_cache_entries": len(self._pack_cache),
+                "artifact_hits": self.artifact_hits,
+                "artifact_saves": self.artifact_saves,
+                "artifact_spills": self.artifact_spills,
+                "artifact_store": (None if self.store is None
+                                   else self.store.stats()),
             }

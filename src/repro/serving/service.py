@@ -237,17 +237,28 @@ class InferenceService:
             self._runners[key] = r
         return r
 
+    _PROGRAM_KINDS = ("graph", "program", "artifact")
+
     def warmup(self, key: Optional[ModelKey] = None) -> int:
         """Pre-compile every padding bucket of one (or every) Program
         variant; returns the number of compiles triggered."""
         keys = [key] if key is not None else [
             k for k in self.registry.keys()
-            if self.registry.entry(k).kind in ("graph", "program")]
+            if self.registry.entry(k).kind in self._PROGRAM_KINDS]
         n = 0
         for k in keys:
-            if self.registry.entry(k).kind in ("graph", "program"):
+            if self.registry.entry(k).kind in self._PROGRAM_KINDS:
                 n += self._runner_for(k).warmup()
         return n
+
+    def warm_boot(self) -> Dict:
+        """Cold-start killer: restore every variant from the registry's
+        artifact store (zero ``compile_graph`` with a populated store),
+        then pre-warm every variant's :class:`BucketedRunner` jit cache
+        from its recorded ``meta['input_shape']`` buckets."""
+        report = self.registry.warm_boot()
+        report["bucket_compiles"] = self.warmup()
+        return report
 
     def _max_batch_for(self, key: ModelKey) -> Optional[int]:
         return self.registry.entry(key).max_batch
@@ -362,4 +373,8 @@ class InferenceService:
             "scheduler": self.scheduler.metrics(),
             "straggler": straggler,
             "registry": self.registry.stats(),
+            # lifted out of registry.stats() so dashboards watching the
+            # serving snapshot see store hit-rate/load-p50 at top level
+            "artifact_store": (self.registry.store.stats()
+                               if self.registry.store is not None else None),
         }
