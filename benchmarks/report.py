@@ -133,6 +133,26 @@ def distributed_table(path="BENCH_distributed.json"):
               "scaling from 1 to 4 banks on the mixed-precision stream.")
 
 
+def lm_table(path="BENCH_lm.json"):
+    """Aggregate the continuous-batching LM artifact (emitted by
+    ``benchmarks.run --only lm``) into the EXPERIMENTS.md §LM-serving
+    table; silently skipped when the artifact is absent."""
+    if not os.path.exists(path):
+        return
+    rows = json.load(open(path))
+    print("\n### §LM-serving — continuous batching vs static chunks\n")
+    print("| row | us/token | derived |")
+    print("|---|---|---|")
+    for name in sorted(rows):
+        r = rows[name]
+        print(f"| {name} | {r['us_per_call']:.0f} | {r['derived']} |")
+    sp = rows.get("bench_lm_speedup", {}).get("derived", "")
+    if sp:
+        print(f"\nHeadline: **{sp.split(' ')[0]}** tokens/s on the "
+              "heterogeneous stream, token-granular join/leave vs "
+              "decode-to-the-longest chunks.")
+
+
 def main():
     recs = load_records()
     ok = [r for r in recs if r.get("ok")]
@@ -144,6 +164,7 @@ def main():
     delta_table(recs, os.path.join(ART_DIR, "..", "dryrun_baseline"))
     serving_table()
     distributed_table()
+    lm_table()
 
 
 if __name__ == "__main__":

@@ -9,10 +9,12 @@ steady-state vs re-jit-per-shape, latency percentiles, precision mix) to
 ``BENCH_serving.json``; the bank-scaling rows (1 vs 4 MVU banks, virtual
 + wall domains, sharded/pipelined placements) to
 ``BENCH_distributed.json``; the AOT artifact-store rows (cold compile vs
-warm boot of a 2-model x 2-precision registry) to ``BENCH_coldstart.json``.
+warm boot of a 2-model x 2-precision registry) to ``BENCH_coldstart.json``;
+the continuous-batching LM rows (static chunked vs token-granular decode
+on a heterogeneous stream) to ``BENCH_lm.json``.
 
 Run: PYTHONPATH=src python -m benchmarks.run
-     [--only kernels,tables,conv,compile,serving,distributed,coldstart]
+     [--only kernels,tables,conv,compile,serving,distributed,coldstart,lm]
      [--json BENCH_kernels.json] [--conv-json BENCH_conv.json]
      [--compile-json BENCH_compile.json]
      [--serving-json BENCH_serving.json]
@@ -33,7 +35,7 @@ _ROWS: dict = {}
 # per-group artifact keys: group tag -> row names (dumped to the group's
 # own BENCH_*.json next to the all-rows dump)
 _GROUP_KEYS: dict = {"conv": [], "compile": [], "serving": [],
-                     "distributed": [], "coldstart": []}
+                     "distributed": [], "coldstart": [], "lm": []}
 
 
 def _emit(name: str, us: float, derived: str = "",
@@ -618,6 +620,90 @@ def bench_serving():
           f"straggler events {m['straggler']['events']}", group="serving")
 
 
+def bench_lm():
+    """Continuous-batching LM decode vs the static chunked baseline.
+
+    Workload: a heterogeneous stream of 16 greedy requests (prompts 4-16
+    tokens; every 4th request wants a long completion, the rest short) on
+    the stablelm smoke config. Static = ``Server.generate`` in arrival-
+    order chunks of ``batch_slots``: each chunk decodes
+    ``max(max_new_tokens)`` steps, so one straggler pins three finished
+    slots. Continuous = ``ContinuousLMEngine.serve``: requests join/leave
+    the slot arena at token boundaries, a freed slot admits the next
+    prompt on the very next step. Both paths run post-warmup (closed jit
+    caches); the continuous row asserts zero steady-state recompiles and
+    every request is checked bit-exact against a single-request static
+    decode before the rows are emitted.
+    """
+    from repro.configs.base import get_arch
+    from repro.launch.serve import GenRequest, Server
+    from repro.serving import ContinuousLMEngine
+
+    cfg = get_arch("stablelm-1.6b").smoke
+    slots, max_len = 4, 64
+    rng = np.random.RandomState(7)
+    reqs = []
+    for i in range(16):
+        L = int(rng.randint(4, 17))
+        if i % 4 == 0:                      # 1-in-4 long completions
+            M = int(min(40 + rng.randint(0, 9), max_len - L))
+        else:
+            M = int(rng.randint(4, 9))
+        reqs.append((rng.randint(0, cfg.vocab_size, (L,)).astype(np.int32),
+                     M))
+    n_tok = sum(m for _, m in reqs)
+
+    # ---- static baseline: chunked Server.generate, post-warmup
+    server = Server(cfg, batch_slots=slots, max_len=max_len, seed=0)
+    chunks = [reqs[i:i + slots] for i in range(0, len(reqs), slots)]
+    for c in chunks:                        # warm the per-shape jit cache
+        server.generate([GenRequest(p.copy(), m) for p, m in c])
+    lat_static, t0 = [], time.perf_counter()
+    for c in chunks:
+        server.generate([GenRequest(p.copy(), m) for p, m in c])
+        done = time.perf_counter() - t0     # whole chunk finishes together
+        lat_static += [done * 1e3] * len(c)
+    dt_static = time.perf_counter() - t0
+    steps_static = sum(max(m for _, m in c) for c in chunks)
+    _emit("bench_lm_static", dt_static / n_tok * 1e6,
+          f"{n_tok/dt_static:.1f} tok/s over {len(reqs)} reqs "
+          f"({n_tok} tokens, {steps_static} chunk-steps); "
+          f"p50 {np.percentile(lat_static, 50):.1f}ms "
+          f"p99 {np.percentile(lat_static, 99):.1f}ms; "
+          f"chunks of {slots} decode max(max_new) steps", group="lm")
+
+    # ---- continuous engine: same stream through the slot arena
+    engine = ContinuousLMEngine(cfg, batch_slots=slots, max_len=max_len,
+                                seed=0)
+    engine.warmup()
+    t0 = time.perf_counter()
+    out = engine.serve([GenRequest(p.copy(), m) for p, m in reqs])
+    dt_cont = time.perf_counter() - t0
+    em = engine.engine_metrics()
+    recompiles = engine.stats()["recompiles_after_warmup"]
+    assert recompiles == 0, f"steady-state recompiles: {engine.stats()}"
+    _emit("bench_lm_continuous", dt_cont / n_tok * 1e6,
+          f"{n_tok/dt_cont:.1f} tok/s ({em['decode_steps']} decode steps); "
+          f"p50 {em['latency_p50_ms']:.1f}ms "
+          f"p99 {em['latency_p99_ms']:.1f}ms; "
+          f"slot_occupancy={em['slot_occupancy']:.2f}; "
+          f"recompiles_after_warmup={recompiles}", group="lm")
+    _emit("bench_lm_speedup", 0,
+          f"{dt_static/dt_cont:.2f}x tokens/s vs static chunked baseline "
+          f"(>=2x required)", group="lm")
+
+    # ---- greedy outputs must be bit-exact per request vs a
+    # single-request static decode (no co-resident may perturb anyone)
+    exact = all(
+        r.out_tokens == server.generate(
+            [GenRequest(p.copy(), m)])[0].out_tokens
+        for r, (p, m) in zip(out, reqs))
+    assert exact, "continuous decode diverged from single-request static"
+    _emit("bench_lm_bit_exact", 0,
+          f"bit_exact={exact} over {len(reqs)} requests vs "
+          f"single-request static decode", group="lm")
+
+
 def bench_coldstart():
     """AOT artifact store: cold compile vs warm boot of a 2-model x
     2-precision registry.
@@ -796,6 +882,7 @@ GROUPS = {
     "serving": [bench_serving],
     "distributed": [bench_distributed],
     "coldstart": [bench_coldstart],
+    "lm": [bench_lm],
     "roofline": [roofline_summary],
 }
 
@@ -823,6 +910,9 @@ def main(argv=None) -> None:
     ap.add_argument("--coldstart-json", default="BENCH_coldstart.json",
                     help="path for the artifact warm-boot rows dump "
                          "('' disables)")
+    ap.add_argument("--lm-json", default="BENCH_lm.json",
+                    help="path for the continuous-batching LM rows dump "
+                         "('' disables)")
     args = ap.parse_args(argv)
     groups = list(GROUPS) if not args.only else [
         g.strip() for g in args.only.split(",") if g.strip()]
@@ -841,7 +931,8 @@ def main(argv=None) -> None:
     group_paths = {"conv": args.conv_json, "compile": args.compile_json,
                    "serving": args.serving_json,
                    "distributed": args.distributed_json,
-                   "coldstart": args.coldstart_json}
+                   "coldstart": args.coldstart_json,
+                   "lm": args.lm_json}
     for grp, path in group_paths.items():
         keys = _GROUP_KEYS[grp]
         if not path or not keys:

@@ -171,11 +171,14 @@ class ArtifactStore:
         refs/<name>              name/recipe tag -> program ref
         tuning/<sha1>.json       persisted autotuner decisions
 
-    The store is append-only: blobs are never deleted, so evicting a
-    resident Program (or dropping a whole registry) can never orphan a
-    plane a sibling variant's artifact still references. All writes are
-    atomic (tmp + rename); counters are in-process accounting for this
-    session, disk totals are computed from the tree.
+    Writes are append-only: blobs are never deleted by normal operation,
+    so evicting a resident Program (or dropping a whole registry) can
+    never orphan a plane a sibling variant's artifact still references.
+    Space is reclaimed explicitly via :meth:`gc`, which drops manifests no
+    ref tag points at and blobs no surviving manifest references — with a
+    dry-run mode that only reports. All writes are atomic (tmp + rename);
+    counters are in-process accounting for this session, disk totals are
+    computed from the tree.
     """
 
     def __init__(self, root: str):
@@ -313,6 +316,91 @@ class ArtifactStore:
             with open(os.path.join(d, name)) as f:
                 out[name] = f.read().strip()
         return out
+
+    def untag(self, name: str) -> bool:
+        """Drop one ref tag (the artifact it pointed at becomes
+        collectable by :meth:`gc` unless another *name* tag still reaches
+        it — ``recipe:`` index entries don't root anything).
+        Returns whether the tag existed."""
+        path = self._ref_path(name)
+        if not os.path.exists(path):
+            return False
+        os.remove(path)
+        return True
+
+    # ---------------------------------------------------------------- gc
+    def gc(self, *, dry_run: bool = False) -> Dict:
+        """Reclaim unreachable artifacts: manifests no *name* tag points
+        at, then blobs no surviving manifest references.
+
+        GC roots are the stable name tags (``model@precision``).
+        ``recipe:<digest>`` tags are a derived lookup index, not
+        ownership — every save re-tags its recipe, so treating them as
+        roots would make every artifact immortal. Recipe (and otherwise
+        dangling) tags whose target manifest dies are swept in the same
+        pass; the registry tolerates a vanished recipe target anyway by
+        falling back to a fresh compile.
+
+        Reachability is the same walk :meth:`stats` prices dedup with —
+        ``refs/* -> programs/<ref>.json -> params[*][*]["blob"]`` — so a
+        packed plane shared by several precision variants survives as
+        long as any of them is still tagged. ``dry_run=True`` reports the
+        would-be deletions without touching the tree. Unreadable manifest
+        files are conservatively kept (they may be a concurrent writer's
+        fresh rename target — and deleting them couldn't free blobs we
+        can't parse references out of anyway).
+        """
+        all_tags = self.tags()
+        live_refs = {r for n, r in all_tags.items()
+                     if not n.startswith("recipe:")}
+        pdir = os.path.join(self.root, "programs")
+        bdir = os.path.join(self.root, "blobs")
+        dead_programs: List[str] = []
+        live_blobs: set = set()
+        for fname in sorted(os.listdir(pdir)):
+            ref = fname[:-len(".json")] if fname.endswith(".json") else fname
+            if ref not in live_refs:
+                dead_programs.append(fname)
+                continue
+            try:
+                with open(os.path.join(pdir, fname)) as f:
+                    m = json.load(f)
+            except (ValueError, OSError):
+                continue   # unreadable but tagged: keep, reference nothing
+            for p in m.get("params", {}).values():
+                for rec in p.values():
+                    if rec.get("blob"):
+                        live_blobs.add(rec["blob"])
+        dead_blobs = [n for n in sorted(os.listdir(bdir))
+                      if n[:-len(".npy")] not in live_blobs]
+        # index hygiene: recipe/dangling tags whose manifest is going away
+        # (or is already gone) leave with it
+        dead_refs = {f[:-len(".json")] if f.endswith(".json") else f
+                     for f in dead_programs}
+        dead_tags = [n for n, r in all_tags.items()
+                     if n.startswith("recipe:")
+                     and (r in dead_refs or not os.path.exists(
+                         os.path.join(pdir, f"{r}.json")))]
+        freed = sum(os.path.getsize(os.path.join(bdir, n))
+                    for n in dead_blobs)
+        freed += sum(os.path.getsize(os.path.join(pdir, n))
+                     for n in dead_programs)
+        if not dry_run:
+            for n in dead_programs:
+                os.remove(os.path.join(pdir, n))
+            for n in dead_blobs:
+                os.remove(os.path.join(bdir, n))
+            for n in dead_tags:
+                self.untag(n)
+        return {
+            "dry_run": dry_run,
+            "live_programs": len(live_refs),
+            "removed_programs": len(dead_programs),
+            "live_blobs": len(live_blobs),
+            "removed_blobs": len(dead_blobs),
+            "removed_tags": len(dead_tags),
+            "bytes_freed": freed,
+        }
 
     # ------------------------------------------------------------ tuning
     def _tuning_path(self, key_repr: str) -> str:

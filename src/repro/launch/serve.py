@@ -94,9 +94,24 @@ class Server:
                 f"prompt(s) longer than max_len={self.max_len}: "
                 + ", ".join(f"request {i} has {n} tokens"
                             for i, n in too_long))
+        # the decode loop writes KV at positions up to
+        # len(prompt) + max_new_tokens - 2; past max_len the
+        # dynamic_update_slice clamps and silently overwrites the last
+        # cache entry, so reject over-budget requests up front
+        over = [(i, len(r.prompt) + r.max_new_tokens)
+                for i, r in enumerate(requests)
+                if len(r.prompt) + r.max_new_tokens > self.max_len]
+        if over:
+            raise ValueError(
+                f"len(prompt) + max_new_tokens exceeds the KV budget "
+                f"max_len={self.max_len}: "
+                + ", ".join(f"request {i} needs {n}" for i, n in over))
         n_real = len(requests)
-        while len(requests) < self.batch_slots:  # pad with dummies
-            requests = requests + [GenRequest(requests[0].prompt, 0)]
+        # pad free slots with minimal dummies: a single masked token and a
+        # zero decode budget, so dummies neither replicate a real prompt's
+        # prefill work nor count toward any token/latency accounting
+        while len(requests) < self.batch_slots:
+            requests = requests + [GenRequest(np.zeros(1, np.int32), 0)]
         s = max(len(r.prompt) for r in requests)
         toks = np.zeros((len(requests), s), np.int32)
         for i, r in enumerate(requests):
@@ -117,18 +132,32 @@ class Server:
             all_toks = np.zeros((len(requests), 0), np.int32)
         for i, r in enumerate(requests):
             r.out_tokens = [int(v) for v in all_toks[i, :r.max_new_tokens]]
+        self.last_stats = {        # dummies excluded from all accounting
+            "real_requests": n_real,
+            "padded_slots": len(requests) - n_real,
+            "real_tokens": sum(len(r.out_tokens)
+                               for r in requests[:n_real]),
+            "decode_steps": max(0, n_new - 1),
+        }
         return requests[:n_real]  # dummies pad the batch; don't return them
 
 
 def make_lm_engine(server: "Server"):
-    """Adapt a :class:`Server` to the serving runtime's engine contract:
-    ``fn(requests) -> results``, one result per request, in order.
+    """**Thin compat shim**: adapt a :class:`Server` to the serving
+    runtime's engine contract (``fn(requests) -> results``, one result per
+    request, in order) by draining loads in sequential slot-sized chunks —
+    every chunk decodes to its longest member's ``max_new_tokens``.
 
-    Register with
-    :meth:`repro.serving.ModelRegistry.register_callable` (pass
-    ``max_batch=server.batch_slots`` so the batcher respects the slot
-    count); every payload must be a :class:`GenRequest`. Loads larger
-    than one slot batch are served in consecutive slot-sized chunks.
+    This is the *static-batch baseline*. New code should serve LM traffic
+    through :class:`repro.serving.ContinuousLMEngine`, which joins/leaves
+    the batch at token boundaries (a finished request frees its slot for
+    the next queued one) and books scheduler cycles per decode step; it is
+    kept for benchmark comparison and for families the slot arena can't
+    host (see :func:`repro.serving.supports_continuous`).
+
+    Register with :meth:`repro.serving.ModelRegistry.register_callable`
+    (pass ``max_batch=server.batch_slots`` so the batcher respects the
+    slot count); every payload must be a :class:`GenRequest`.
     """
 
     def engine(requests: List[GenRequest]) -> List[GenRequest]:
@@ -344,6 +373,12 @@ def _main_compile(argv) -> None:
     ap.add_argument("--interpret", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--calib-batch", type=int, default=8)
+    ap.add_argument("--gc", action="store_true",
+                    help="after compiling, drop store artifacts no ref "
+                         "tag reaches (untagged manifests + orphaned "
+                         "blobs)")
+    ap.add_argument("--gc-dry-run", action="store_true",
+                    help="report what --gc would delete without deleting")
     args = ap.parse_args(argv)
     cfg = get_arch(args.arch).smoke
     if getattr(cfg, "family", None) != "cnn":
@@ -373,6 +408,14 @@ def _main_compile(argv) -> None:
         how = ("store hit" if registry.artifact_hits > hits0
                else "compiled")
         print(f"{key}: {e.ref[:12]}… ({how}) in {dt*1e3:.0f}ms")
+    if args.gc or args.gc_dry_run:
+        rep = registry.store.gc(dry_run=args.gc_dry_run)
+        mode = "gc dry-run" if rep["dry_run"] else "gc"
+        print(f"{mode}: removed_programs={rep['removed_programs']} "
+              f"removed_blobs={rep['removed_blobs']} "
+              f"bytes_freed={rep['bytes_freed']} "
+              f"(live: {rep['live_programs']} programs, "
+              f"{rep['live_blobs']} blobs)")
     st = registry.store.stats()
     print(f"store {args.store}: programs={st['programs']} "
           f"blobs={st['blobs']} bytes_on_disk={st['bytes_on_disk']} "
@@ -422,10 +465,58 @@ def main():
         return
     if args.store or args.artifact:
         print("note: --store/--artifact apply to compiled CNN archs only")
-    server = Server(cfg, batch_slots=args.batch, max_len=64,
+    from repro.serving import (ContinuousLMEngine, InferenceService,
+                               ModelRegistry, supports_continuous)
+    max_len = 64
+    rng = np.random.RandomState(0)
+    if supports_continuous(cfg):
+        # token-granular continuous batching through the serving runtime:
+        # requests join/leave the slot arena at token boundaries, and the
+        # scheduler is booked per decode step
+        engine = ContinuousLMEngine(cfg, batch_slots=args.batch,
+                                    max_len=max_len,
+                                    quantized=not args.no_quant,
+                                    backend=args.backend,
+                                    interpret=args.interpret or None)
+        warm = engine.warmup()
+        print(f"engine warmup: {warm['compiles']} traces "
+              f"(buckets {warm['buckets']}) in {warm['seconds']}s")
+        registry = ModelRegistry()
+        key = registry.register_callable(args.arch, engine)
+        # heterogeneous demo traffic: mixed prompt lengths + decode budgets
+        # (the shape continuous batching wins on)
+        n_load = max(args.batch * 4, 8)
+        m_long = max(1, min(args.new_tokens, max_len - 16))
+        reqs = [GenRequest(
+            rng.randint(0, cfg.vocab_size,
+                        (int(rng.randint(4, 17)),)).astype(np.int32),
+            m_long if i % 4 == 0 else max(1, m_long // 4))
+            for i in range(n_load)]
+        with InferenceService(registry, max_wait_s=0.0) as svc:
+            t0 = time.perf_counter()
+            futures = svc.submit_many(key, reqs)
+            svc.drain()
+            dt = time.perf_counter() - t0
+            out = [f.result() for f in futures]
+            m = svc.metrics()
+        total = sum(len(r.out_tokens) for r in out)
+        em = m["engines"][str(key)]
+        print(f"generated {total} tokens over {len(out)} requests in "
+              f"{dt:.2f}s ({total/dt:.1f} tok/s, continuous batching, "
+              f"quantized={not args.no_quant})")
+        print(f"engine: occupancy={em['slot_occupancy']} "
+              f"decode_steps={em['decode_steps']} "
+              f"recompiles_after_warmup="
+              f"{em['jit']['recompiles_after_warmup']} "
+              f"scheduler_steps={m['scheduler']['admitted_batches']}")
+        print("sample:", out[0].out_tokens)
+        return
+    print(f"note: family={cfg.family!r} doesn't fit the continuous slot "
+          "arena (SSM/hybrid state, rolling windows, or encoder inputs) — "
+          "serving via the static batch path")
+    server = Server(cfg, batch_slots=args.batch, max_len=max_len,
                     quantized=not args.no_quant, backend=args.backend,
                     interpret=args.interpret or None)
-    rng = np.random.RandomState(0)
     reqs = [GenRequest(rng.randint(0, cfg.vocab_size, (8,)).astype(np.int32),
                        args.new_tokens) for _ in range(args.batch)]
     t0 = time.perf_counter()

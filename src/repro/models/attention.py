@@ -55,21 +55,30 @@ class AttnConfig:
 
 def _sdpa_full(q, k, v, *, causal, window, q_offset, softmax_dtype=jnp.float32):
     """Reference attention (small shapes / decode): q (B,Sq,H,D),
-    k/v (B,Sk,Hkv,D). GQA via head grouping."""
+    k/v (B,Sk,Hkv,D). GQA via head grouping. ``q_offset`` is a scalar for
+    lockstep batches, or a per-row (B,) vector when every sequence sits at
+    its own cache depth (the continuous-batching slot arena)."""
     b, sq, h, d = q.shape
     sk, hkv = k.shape[1], k.shape[2]
     rep = h // hkv
     qg = q.reshape(b, sq, hkv, rep, d)
     scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg.astype(softmax_dtype),
                         k.astype(softmax_dtype)) / np.sqrt(d)
-    qpos = q_offset + jnp.arange(sq)[:, None]
-    kpos = jnp.arange(sk)[None, :]
-    mask = jnp.ones((sq, sk), bool)
+    if jnp.ndim(q_offset) == 1:
+        qpos = q_offset[:, None, None] + jnp.arange(sq)[None, :, None]
+        kpos = jnp.arange(sk)[None, None, :]
+        mask = jnp.ones((b, sq, sk), bool)
+        expand = lambda m: m[:, None, None]   # -> (B,1,1,Sq,Sk) over (g,r)
+    else:
+        qpos = q_offset + jnp.arange(sq)[:, None]
+        kpos = jnp.arange(sk)[None, :]
+        mask = jnp.ones((sq, sk), bool)
+        expand = lambda m: m
     if causal:
         mask &= kpos <= qpos
     if window is not None:
         mask &= kpos > qpos - window
-    scores = jnp.where(mask, scores, -jnp.inf)
+    scores = jnp.where(expand(mask), scores, -jnp.inf)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bgrqk,bkgd->bqgrd", p, v.astype(softmax_dtype))
     return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
@@ -231,9 +240,22 @@ def _roll_insert(buf, new):
     return jnp.concatenate([buf[:, s:], new], axis=1)
 
 
+def _seq_update(buf, new, pos):
+    """``dynamic_update_slice`` along the sequence axis (axis 1). ``pos`` is
+    a scalar for lockstep batches, or a per-row (B,) vector when every row
+    decodes at its own depth (continuous batching)."""
+    new = new.astype(buf.dtype)
+    if jnp.ndim(pos) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, pos, 1)
+    return jax.vmap(
+        lambda b, n, p: jax.lax.dynamic_update_slice_in_dim(b, n, p, 0)
+    )(buf, new, pos)
+
+
 def update_kv_cache(cache: dict, k_new, v_new, pos) -> dict:
-    """Insert new K/V at ``pos`` (scalar int). Works for prefill (S>1) and
-    decode (S=1); rolling (sliding-window) caches shift instead of index."""
+    """Insert new K/V at ``pos`` (scalar int, or per-row (B,) positions).
+    Works for prefill (S>1) and decode (S=1); rolling (sliding-window)
+    caches shift instead of index and only support scalar ``pos``."""
     upd = dict(cache)
     rolling = "rolling" in cache
     if "k" in cache:
@@ -241,10 +263,8 @@ def update_kv_cache(cache: dict, k_new, v_new, pos) -> dict:
             upd["k"] = _roll_insert(cache["k"], k_new)
             upd["v"] = _roll_insert(cache["v"], v_new)
         else:
-            upd["k"] = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k_new.astype(cache["k"].dtype), pos, 1)
-            upd["v"] = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v_new.astype(cache["v"].dtype), pos, 1)
+            upd["k"] = _seq_update(cache["k"], k_new, pos)
+            upd["v"] = _seq_update(cache["v"], v_new, pos)
     else:
         kq, ks = _quant_kv(k_new)
         vq, vs = _quant_kv(v_new)
@@ -254,10 +274,10 @@ def update_kv_cache(cache: dict, k_new, v_new, pos) -> dict:
             upd["k_s"] = _roll_insert(cache["k_s"], ks)
             upd["v_s"] = _roll_insert(cache["v_s"], vs)
         else:
-            upd["k_q"] = jax.lax.dynamic_update_slice_in_dim(cache["k_q"], kq, pos, 1)
-            upd["v_q"] = jax.lax.dynamic_update_slice_in_dim(cache["v_q"], vq, pos, 1)
-            upd["k_s"] = jax.lax.dynamic_update_slice_in_dim(cache["k_s"], ks, pos, 1)
-            upd["v_s"] = jax.lax.dynamic_update_slice_in_dim(cache["v_s"], vs, pos, 1)
+            upd["k_q"] = _seq_update(cache["k_q"], kq, pos)
+            upd["v_q"] = _seq_update(cache["v_q"], vq, pos)
+            upd["k_s"] = _seq_update(cache["k_s"], ks, pos)
+            upd["v_s"] = _seq_update(cache["v_s"], vs, pos)
     upd["len"] = pos + k_new.shape[1]
     return upd
 
@@ -399,10 +419,8 @@ def mla_apply(p: dict, x: jax.Array, cfg: AttnConfig, policy: QuantPolicy, *,
 
     if cache is not None:  # decode: absorbed form over the latent cache
         upd = dict(cache)
-        upd["c"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["c"], c.astype(cache["c"].dtype), cache_pos, 1)
-        upd["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), cache_pos, 1)
+        upd["c"] = _seq_update(cache["c"], c, cache_pos)
+        upd["k_rope"] = _seq_update(cache["k_rope"], k_rope, cache_pos)
         upd["len"] = cache_pos + s
         c_all = upd["c"]          # (b, S, lora)
         kr_all = upd["k_rope"]    # (b, S, dr)
@@ -413,10 +431,17 @@ def mla_apply(p: dict, x: jax.Array, cfg: AttnConfig, policy: QuantPolicy, *,
                   + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
                                kr_all.astype(jnp.float32)))
         scores = scores / np.sqrt(dn + dr)
-        kpos = jnp.arange(c_all.shape[1])[None, :]
-        qpos = cache_pos + jnp.arange(s)[:, None]
-        mask = kpos <= qpos
-        scores = jnp.where(mask[None, None], scores, -1e30)
+        if jnp.ndim(cache_pos) == 1:
+            # per-row cache depths (continuous batching): (B, s, S) mask
+            kpos = jnp.arange(c_all.shape[1])[None, None, :]
+            qpos = cache_pos[:, None, None] + jnp.arange(s)[None, :, None]
+            mask = kpos <= qpos
+            scores = jnp.where(mask[:, None], scores, -1e30)
+        else:
+            kpos = jnp.arange(c_all.shape[1])[None, :]
+            qpos = cache_pos + jnp.arange(s)[:, None]
+            mask = kpos <= qpos
+            scores = jnp.where(mask[None, None], scores, -1e30)
         pattn = jax.nn.softmax(scores, axis=-1)
         ctx_c = jnp.einsum("bhst,btl->bshl", pattn, c_all.astype(jnp.float32))
         wuv = p["w_uv"]["w"].reshape(lora, h, dv)

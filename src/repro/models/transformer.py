@@ -450,8 +450,14 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, src_len: int = 0):
             for s in layer_groups(cfg)]
 
 
-def prefill(params, batch, cfg: ModelConfig, max_len: int):
-    """Run the prompt, building caches. Returns (last_logits, caches)."""
+def prefill(params, batch, cfg: ModelConfig, max_len: int, last_pos=None):
+    """Run the prompt, building caches. Returns (last_logits, caches).
+
+    ``last_pos``: optional per-row (B,) index of the last *real* prompt
+    token. The continuous-batching engine right-pads prompts to a
+    power-of-two bucket, so the next-token logits live at position L-1
+    rather than at the end of the padded row; with a causal mask the
+    positions up to L-1 compute identically to an unpadded prefill."""
     dt = cfg.compute_dtype
     specs = layer_groups(cfg)
     enc_out = None
@@ -476,7 +482,11 @@ def prefill(params, batch, cfg: ModelConfig, max_len: int):
     x, caches, _ = _run_groups(params["groups"], x, cfg, specs,
                                positions=positions, caches=caches,
                                cache_pos=0, enc_out=enc_out)
-    x = _norm(x[:, -1:], params["final_norm"], params.get("final_norm_b"), cfg)
+    if last_pos is not None:
+        x = x[jnp.arange(x.shape[0]), last_pos][:, None]
+    else:
+        x = x[:, -1:]
+    x = _norm(x, params["final_norm"], params.get("final_norm_b"), cfg)
     if cfg.tie_embeddings:
         logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
     else:
@@ -486,11 +496,16 @@ def prefill(params, batch, cfg: ModelConfig, max_len: int):
 
 def decode_step(params, caches, tokens, pos, cfg: ModelConfig):
     """One token for every sequence in the batch. ``tokens``: (B, 1);
-    ``pos``: scalar int32 position. Returns (logits (B, V), new_caches)."""
+    ``pos``: scalar int32 position (lockstep batch) or per-row (B,)
+    positions — the continuous-batching slot arena, where every slot
+    decodes at its own depth. Returns (logits (B, V), new_caches)."""
     dt = cfg.compute_dtype
     specs = layer_groups(cfg)
     x = params["embed"][tokens].astype(dt)
-    positions = jnp.full((1, 1), pos, jnp.int32)
+    if jnp.ndim(pos) == 1:
+        positions = pos[:, None]
+    else:
+        positions = jnp.full((1, 1), pos, jnp.int32)
     x, caches, _ = _run_groups(params["groups"], x, cfg, specs,
                                positions=positions, caches=caches,
                                cache_pos=pos, decode=True)

@@ -15,6 +15,10 @@ fabric runs mixed-precision networks without reconfiguration.
   (cost model + BarrelController simulation, per-slot utilization).
 * :mod:`repro.serving.service`   — the thread-driven front end:
   ``submit`` / ``submit_many`` / ``drain`` + the metrics snapshot.
+* :mod:`repro.serving.lm_engine` — continuous-batching autoregressive LM
+  decode: a persistent jitted loop over a ``batch_slots x max_len`` slot
+  arena where requests join/leave at token boundaries; the scheduler is
+  booked per decode step, not per request.
 
 With ``n_banks > 1`` the service scales across a device mesh — one 8-slot
 MVU bank per jax device (:mod:`repro.distributed.program_parallel`): the
@@ -26,10 +30,13 @@ device, and micro-batches either load-balance across banks
 
 from repro.serving.batcher import (DynamicBatcher, MicroBatch, QueueFull,
                                    Request)
+from repro.serving.lm_engine import (ContinuousLMEngine, decode_cost_stream,
+                                     supports_continuous)
 from repro.serving.registry import ModelKey, ModelRegistry, precision_label
 from repro.serving.scheduler import Admission, SlotScheduler
 from repro.serving.service import InferenceService
 
 __all__ = ["ModelKey", "ModelRegistry", "precision_label", "DynamicBatcher",
            "MicroBatch", "Request", "QueueFull", "SlotScheduler",
-           "Admission", "InferenceService"]
+           "Admission", "InferenceService", "ContinuousLMEngine",
+           "supports_continuous", "decode_cost_stream"]

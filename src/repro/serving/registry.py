@@ -257,6 +257,9 @@ class ModelRegistry:
                 e.ref = ref
                 self.artifact_hits += 1
                 self.store._note_hit()
+                # re-assert the name tag: a hit found only through the
+                # recipe index must still be a GC root afterwards
+                self.store.tag(str(key), ref)
                 return prog
             self.store._note_miss()
         if e.kind == "artifact":

@@ -299,6 +299,18 @@ class InferenceService:
         """Book the batch and launch its device work (no host sync)."""
         entry = self.registry.entry(mb.key)
         if entry.kind == "callable":
+            if getattr(entry.fn, "books_own_cycles", False):
+                # continuous engines book the scheduler themselves, per
+                # decode step (token granularity) — a per-batch admission
+                # here would double-count their cycles
+                if getattr(entry.fn, "_scheduler", None) is not self.scheduler:
+                    entry.fn.bind_runtime(self.scheduler, mb.key)
+                results = entry.fn([r.payload for r in mb.requests])
+                if len(results) != mb.size:
+                    raise RuntimeError(
+                        f"engine {mb.key} returned {len(results)} results "
+                        f"for {mb.size} requests")
+                return ("list", results), None
             admission = self.scheduler.admit(mb.key, mb.size,
                                              stream=entry.stream)
             results = entry.fn([r.payload for r in mb.requests])
@@ -355,6 +367,15 @@ class InferenceService:
                 return 0.0
             return lats[min(len(lats) - 1, int(p / 100 * len(lats)))]
 
+        # continuous LM engines (kind="callable" with engine_metrics):
+        # tokens/s, slot occupancy, and the jit-trace counters — surfaced
+        # per key so mixed CNN/LM registries stay legible
+        engines = {}
+        for k in self.registry.keys():
+            fn = getattr(self.registry.entry(k), "fn", None)
+            if fn is not None and hasattr(fn, "engine_metrics"):
+                engines[str(k)] = fn.engine_metrics()
+
         return {
             "completed": self.completed,
             "failed": self.failed,
@@ -363,6 +384,13 @@ class InferenceService:
             "batches": self.batcher.batches,
             "latency_p50_ms": round(pct(50) * 1e3, 3),
             "latency_p99_ms": round(pct(99) * 1e3, 3),
+            "tokens_per_s": (round(sum(
+                e["tokens_per_s"] for e in engines.values()), 1)
+                if engines else None),
+            "slot_occupancy": (round(sum(
+                e["slot_occupancy"] for e in engines.values())
+                / len(engines), 4) if engines else None),
+            "engines": engines or None,
             "bucket_caches": buckets,
             "banks": {
                 "n_banks": self.n_banks,

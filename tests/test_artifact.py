@@ -345,3 +345,114 @@ def test_service_metrics_expose_store(populated):
     assert reg.compiles == 0
     assert m["artifact_store"]["loads"] >= 4
     assert m["registry"]["artifact_hits"] == 4
+
+
+# ------------------------------------------------------------ garbage gc
+
+@pytest.fixture()
+def gc_store(tmp_path):
+    """A fresh store with 2 models x 2 precisions; same-w_bits variants of
+    one model share packed-weight blobs on disk."""
+    root = str(tmp_path / "gcstore")
+    reg = ModelRegistry(store=root)
+    keys = _register_all(reg)
+    outs = {str(k): np.asarray(reg.program(k)(_x())) for k in keys}
+    return ArtifactStore(root), keys, outs
+
+
+def test_gc_noop_when_everything_tagged(gc_store):
+    store, keys, _ = gc_store
+    before = store.stats()
+    rep = store.gc()
+    assert rep["removed_programs"] == 0 and rep["removed_blobs"] == 0
+    assert rep["bytes_freed"] == 0
+    assert rep["live_programs"] == len(set(store.tags().values()))
+    assert store.stats() == before
+
+
+def test_gc_dry_run_reports_without_deleting(gc_store):
+    store, keys, _ = gc_store
+    assert store.untag(str(keys[0]))
+    assert not store.untag(str(keys[0]))        # idempotent: already gone
+    before = store.stats()
+    rep = store.gc(dry_run=True)
+    assert rep["dry_run"] is True
+    assert rep["removed_programs"] == 1
+    assert rep["bytes_freed"] > 0
+    # nothing touched: the dead manifest and its blobs are all still there
+    assert store.stats() == before
+    live = store.gc()                            # now collect for real
+    assert live["removed_programs"] == 1
+    assert live["bytes_freed"] >= rep["bytes_freed"]
+
+
+def test_gc_keeps_blobs_shared_with_surviving_tags(gc_store):
+    """m0@W2A2 and m0@W2A8 share packed planes (same w_bits). Untagging
+    one precision must only reclaim its unique blobs — the survivor still
+    loads bit-exact afterwards."""
+    store, keys, outs = gc_store
+    k_dead, k_live = keys[0], keys[1]            # m0 at W2A2 / W2A8
+    blobs_before = store.stats()["blobs"]
+    store.untag(str(k_dead))
+    rep = store.gc()
+    assert rep["removed_programs"] == 1
+    # shared planes survive; only variant-unique blobs (if any) go
+    assert store.stats()["blobs"] == blobs_before - rep["removed_blobs"]
+    prog = load_program(str(k_live), store)
+    np.testing.assert_array_equal(np.asarray(prog(_x())),
+                                  outs[str(k_live)])
+
+
+def test_gc_collects_fully_untagged_model(gc_store):
+    store, keys, outs = gc_store
+    st0 = store.stats()
+    for k in keys[2:]:                           # drop m1 entirely
+        assert store.untag(str(k))
+    rep = store.gc()
+    assert rep["removed_programs"] == 2
+    assert rep["removed_blobs"] > 0              # m1's planes orphaned
+    assert rep["bytes_freed"] > 0
+    st = store.stats()
+    assert st["programs"] == st0["programs"] - 2
+    assert st["blobs"] == st0["blobs"] - rep["removed_blobs"]
+    # the untouched model still round-trips
+    for k in keys[:2]:
+        prog = load_program(str(k), store)
+        np.testing.assert_array_equal(np.asarray(prog(_x())),
+                                      outs[str(k)])
+    # second pass finds nothing left to reclaim
+    assert store.gc()["removed_programs"] == 0
+    assert store.gc()["removed_blobs"] == 0
+
+
+def test_gc_keeps_unreadable_but_tagged_manifest(gc_store):
+    store, keys, _ = gc_store
+    ref = store.resolve(str(keys[0]))
+    path = os.path.join(store.root, "programs", f"{ref}.json")
+    _restore(path, b"{not json")
+    rep = store.gc()                             # conservatively kept
+    assert rep["removed_programs"] == 0
+    assert os.path.exists(path)
+
+
+@pytest.mark.slow
+def test_compile_cli_gc_flags(tmp_path, capsys):
+    """`launch.serve compile --gc[-dry-run]` end to end: compile one
+    variant, orphan it by tagging churn, and let the CLI reclaim it."""
+    from repro.launch.serve import _main_compile
+    root = str(tmp_path / "clistore")
+    base = ["--arch", "resnet9-cifar10", "--store", root,
+            "--precisions", "W2A2", "--calib-batch", "2"]
+    _main_compile(base + ["--gc-dry-run"])
+    out = capsys.readouterr().out
+    assert "gc dry-run: removed_programs=0" in out
+    store = ArtifactStore(root)
+    # orphan the artifact, then re-run with --gc: the fresh compile's save
+    # re-tags the same content, so gc only sweeps true garbage
+    name = next(iter(store.tags()))
+    store.untag(name)
+    _main_compile(base + ["--gc"])
+    out = capsys.readouterr().out
+    assert "(store hit)" in out or "(compiled)" in out
+    assert "gc: removed_programs=0" in out       # re-tagged == reachable
+    assert store.stats()["programs"] == 1

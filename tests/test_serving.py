@@ -275,10 +275,43 @@ def test_server_generate_rejects_long_prompt(lm_server):
     with pytest.raises(ValueError, match="longer than max_len"):
         lm_server.generate(
             [GenRequest(np.arange(17, dtype=np.int32), 2)])
-    # a full-length prompt is fine
+    # a prompt that leaves room for its decode budget is fine
     out = lm_server.generate(
-        [GenRequest(np.arange(16, dtype=np.int32) % 64, 1)])
+        [GenRequest(np.arange(15, dtype=np.int32) % 64, 1)])
     assert len(out) == 1 and len(out[0].out_tokens) == 1
+
+
+def test_server_generate_rejects_over_budget_decode(lm_server):
+    # regression: prompt + max_new_tokens past max_len used to clamp the
+    # KV write and silently corrupt the last cache entry; now it raises
+    from repro.launch.serve import GenRequest
+    with pytest.raises(ValueError, match="KV budget"):
+        lm_server.generate(
+            [GenRequest(np.arange(16, dtype=np.int32) % 64, 1)])
+    with pytest.raises(ValueError, match="KV budget"):
+        lm_server.generate(
+            [GenRequest(np.arange(4, dtype=np.int32), 13)])
+    # exactly on budget is allowed
+    out = lm_server.generate([GenRequest(np.arange(4, dtype=np.int32), 12)])
+    assert len(out[0].out_tokens) == 12
+
+
+def test_server_dummy_slots_minimal_and_unaccounted(lm_server):
+    # regression: dummy padding slots used to replicate requests[0].prompt;
+    # they must not affect the real request's greedy output, and the batch
+    # accounting must exclude them
+    from repro.launch.serve import GenRequest, Server
+    prompt = (np.arange(9, dtype=np.int32) * 5) % 64
+    padded = lm_server.generate([GenRequest(prompt.copy(), 4)])[0]
+    stats = lm_server.last_stats
+    assert stats["real_requests"] == 1
+    assert stats["padded_slots"] == lm_server.batch_slots - 1
+    assert stats["real_tokens"] == 4  # dummy slots contribute zero tokens
+    # a 1-slot server has no dummies at all: same greedy tokens
+    solo_srv = Server(_lm_cfg(), batch_slots=1, max_len=16, seed=0)
+    solo = solo_srv.generate([GenRequest(prompt.copy(), 4)])[0]
+    assert solo.out_tokens == padded.out_tokens
+    assert solo_srv.last_stats["padded_slots"] == 0
 
 
 def test_server_generate_rejects_overfull_batch(lm_server):
@@ -519,3 +552,132 @@ def test_service_straggler_wired(two_precision_registry):
         snap = svc.metrics()["straggler"]
     assert snap["observed"] == 14
     assert snap["events"] >= 1, snap     # the 0.3s batch was flagged
+
+
+# ------------------------------------------------- continuous LM engine
+
+@pytest.fixture(scope="module")
+def cont_engine():
+    from repro.serving import ContinuousLMEngine
+    eng = ContinuousLMEngine(_lm_cfg(), batch_slots=2, max_len=16, seed=0)
+    eng.warmup()
+    return eng
+
+
+def test_continuous_engine_greedy_matches_static(cont_engine, lm_server):
+    """Token-granular join/leave must not change any request's greedy
+    output: every request is bit-identical to a single-request static
+    decode, whatever co-residents shared its arena steps."""
+    from repro.launch.serve import GenRequest
+    rng = np.random.RandomState(11)
+    reqs = []
+    for _ in range(12):
+        L = int(rng.randint(1, 13))
+        M = int(rng.randint(1, 17 - L))
+        reqs.append(GenRequest(
+            rng.randint(0, 64, (L,)).astype(np.int32), M))
+    out = cont_engine.serve(reqs)
+    assert [len(r.out_tokens) for r in out] == \
+        [r.max_new_tokens for r in reqs]
+    for r in out:
+        ref = lm_server.generate(
+            [GenRequest(r.prompt.copy(), r.max_new_tokens)])[0]
+        assert r.out_tokens == ref.out_tokens, (len(r.prompt),
+                                                r.max_new_tokens)
+    assert cont_engine.stats()["recompiles_after_warmup"] == 0
+
+
+def test_continuous_engine_validates_budget(cont_engine):
+    from repro.launch.serve import GenRequest
+    with pytest.raises(ValueError, match="KV budget"):
+        cont_engine.serve([GenRequest(np.arange(10, dtype=np.int32), 7)])
+    with pytest.raises(ValueError, match="empty prompt"):
+        cont_engine.serve([GenRequest(np.zeros(0, np.int32), 2)])
+
+
+def test_continuous_engine_zero_and_one_token(cont_engine):
+    # max_new_tokens=0 never occupies a slot; =1 frees its slot at the
+    # insert boundary (no decode step required)
+    from repro.launch.serve import GenRequest
+    steps0 = cont_engine.decode_steps
+    out = cont_engine.serve([GenRequest(np.arange(3, dtype=np.int32), 0),
+                             GenRequest(np.arange(3, dtype=np.int32), 1)])
+    assert out[0].out_tokens == []
+    assert len(out[1].out_tokens) == 1
+    assert cont_engine.decode_steps == steps0  # no decode step was needed
+
+
+def test_continuous_engine_rejects_unsupported_family():
+    from repro.serving import ContinuousLMEngine, supports_continuous
+    import dataclasses
+    ssm_like = dataclasses.replace(_lm_cfg(), family="ssm", ssm_state=8)
+    assert not supports_continuous(ssm_like)
+    with pytest.raises(ValueError, match="static Server path"):
+        ContinuousLMEngine(ssm_like, batch_slots=2, max_len=16)
+
+
+def test_continuous_engine_books_scheduler_per_step(cont_engine):
+    """Through the service: the batcher feeds admissions, the engine books
+    the SlotScheduler per decode step (not per request), and the metrics
+    snapshot gains tokens/s + slot occupancy + queue depth."""
+    from repro.launch.serve import GenRequest
+    reg = ModelRegistry()
+    key = reg.register_callable("lm-cont", cont_engine, precision="W4A8")
+    svc = InferenceService(reg, max_batch=16, max_wait_s=0.0)
+    steps0 = cont_engine.decode_steps
+    rng = np.random.RandomState(5)
+    with svc:
+        futs = svc.submit_many(
+            key, [GenRequest(rng.randint(0, 64, (4,)).astype(np.int32),
+                             int(rng.randint(2, 6))) for _ in range(6)])
+        svc.drain(timeout=120)
+        outs = [f.result() for f in futs]
+        m = svc.metrics()
+    assert all(len(o.out_tokens) == o.max_new_tokens for o in outs)
+    new_steps = cont_engine.decode_steps - steps0
+    sched = m["scheduler"]
+    # one admission per decode step, each sized by its active slots
+    assert sched["admitted_batches"] >= new_steps > 0
+    assert sched["unscheduled_batches"] == 0
+    assert sched["virtual_cycles"] > 0
+    em = m["engines"][str(key)]
+    assert em["tokens_per_s"] > 0
+    assert 0 < em["slot_occupancy"] <= 1
+    assert m["tokens_per_s"] == em["tokens_per_s"]
+    assert m["slot_occupancy"] == em["slot_occupancy"]
+    assert m["queue_depth"] == 0 and m["completed"] == 6
+
+
+@pytest.mark.slow
+def test_continuous_engine_join_leave_soak(cont_engine, lm_server):
+    """Randomized join/leave soak: waves of mixed prompt lengths and
+    decode budgets under queue pressure — zero steady-state recompiles
+    (trace counters flat), every sampled request bit-exact vs the static
+    single-request path."""
+    from repro.launch.serve import GenRequest
+    rng = np.random.RandomState(23)
+    compiles0 = cont_engine.stats()["total_compiles"]
+    served = []
+    for _ in range(6):                   # waves keep the queue pressured
+        wave = []
+        for _ in range(int(rng.randint(5, 12))):
+            L = int(rng.randint(1, 13))
+            M = int(rng.randint(0, 17 - L))
+            wave.append(GenRequest(
+                rng.randint(0, 64, (max(L, 1),)).astype(np.int32), M))
+        served += cont_engine.serve(wave)
+    assert len(served) >= 30
+    assert all(len(r.out_tokens) == r.max_new_tokens for r in served)
+    # ---- zero steady-state recompiles: the jit-cache signature set was
+    # closed at warmup ({prompt buckets} + insert + decode)
+    assert cont_engine.stats()["total_compiles"] == compiles0
+    assert cont_engine.stats()["recompiles_after_warmup"] == 0
+    # ---- spot-check greedy equivalence across the whole soak
+    for r in served[:: max(1, len(served) // 12)]:
+        if r.max_new_tokens == 0:
+            assert r.out_tokens == []
+            continue
+        ref = lm_server.generate(
+            [GenRequest(r.prompt.copy(), r.max_new_tokens)])[0]
+        assert r.out_tokens == ref.out_tokens
+    assert cont_engine.engine_metrics()["slot_occupancy"] > 0.5
