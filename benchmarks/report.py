@@ -153,6 +153,27 @@ def lm_table(path="BENCH_lm.json"):
               "decode-to-the-longest chunks.")
 
 
+def obs_table(path="BENCH_obs.json"):
+    """Aggregate the observability-overhead artifact (emitted by
+    ``benchmarks.run --only obs``) into the EXPERIMENTS.md §Observability
+    table; silently skipped when the artifact is absent."""
+    if not os.path.exists(path):
+        return
+    rows = json.load(open(path))
+    print("\n### §Observability — tracing/metrics overhead on the "
+          "serving smoke\n")
+    print("| row | us/req (ns for _ns rows) | derived |")
+    print("|---|---|---|")
+    for name in sorted(rows):
+        r = rows[name]
+        print(f"| {name} | {r['us_per_call']:.0f} | {r['derived']} |")
+    ov = rows.get("bench_obs_tracing_overhead_pct", {}).get("derived", "")
+    if ov:
+        print(f"\nHeadline: **{ov.split(' ')[0]}** throughput cost of "
+              "full request tracing (sample_every=1) on the serving "
+              "smoke; disabled-mode metric writes are one flag check.")
+
+
 def main():
     recs = load_records()
     ok = [r for r in recs if r.get("ok")]
@@ -165,6 +186,7 @@ def main():
     serving_table()
     distributed_table()
     lm_table()
+    obs_table()
 
 
 if __name__ == "__main__":

@@ -11,10 +11,13 @@ steady-state vs re-jit-per-shape, latency percentiles, precision mix) to
 ``BENCH_distributed.json``; the AOT artifact-store rows (cold compile vs
 warm boot of a 2-model x 2-precision registry) to ``BENCH_coldstart.json``;
 the continuous-batching LM rows (static chunked vs token-granular decode
-on a heterogeneous stream) to ``BENCH_lm.json``.
+on a heterogeneous stream) to ``BENCH_lm.json``; the observability
+overhead rows (serving smoke with tracing off vs on, metric write cost
+enabled vs disabled) to ``BENCH_obs.json``.
 
 Run: PYTHONPATH=src python -m benchmarks.run
-     [--only kernels,tables,conv,compile,serving,distributed,coldstart,lm]
+     [--only kernels,tables,conv,compile,serving,distributed,coldstart,
+      lm,obs]
      [--json BENCH_kernels.json] [--conv-json BENCH_conv.json]
      [--compile-json BENCH_compile.json]
      [--serving-json BENCH_serving.json]
@@ -35,7 +38,8 @@ _ROWS: dict = {}
 # per-group artifact keys: group tag -> row names (dumped to the group's
 # own BENCH_*.json next to the all-rows dump)
 _GROUP_KEYS: dict = {"conv": [], "compile": [], "serving": [],
-                     "distributed": [], "coldstart": [], "lm": []}
+                     "distributed": [], "coldstart": [], "lm": [],
+                     "obs": []}
 
 
 def _emit(name: str, us: float, derived: str = "",
@@ -620,6 +624,109 @@ def bench_serving():
           f"straggler events {m['straggler']['events']}", group="serving")
 
 
+def bench_obs():
+    """Observability overhead gate (``BENCH_obs.json``, CI-gated).
+
+    The serving smoke A/B'd under the same load: one service with the
+    tracer disabled (the null TraceContext fast path), one with it
+    enabled at ``sample_every=1`` so every request records
+    queue/schedule/execute/finalize spans plus per-hart cycle tracks.
+    Rounds are interleaved (best-of) so a background-load shift cannot
+    land on one side and fake a regression. Enabled tracing must stay
+    within 5% of disabled throughput; a disabled registry's counter
+    write must cost ~one flag check (≈0 at machine scale).
+    """
+    from repro.compiler import Graph, Node
+    from repro.models.layers import QuantPolicy
+    from repro.obs import MetricsRegistry, Tracer
+    from repro.serving import InferenceService, ModelRegistry
+
+    # heavier than _serving_bench_graph on purpose: the relative gate is
+    # meaningless on a microsecond-scale toy (a fixed ~8us/req emit cost
+    # would dominate any ratio); this two-conv CNN puts per-request time
+    # at realistic serving scale while the absolute cost is still emitted
+    rng = np.random.RandomState(5)
+    g = Graph(
+        "obs_cnn", {"x": (None, 8, 8, 16)}, ["y"],
+        [Node("c1", "conv2d", ["x", "c1.w"], "c1.y",
+              {"stride": 1, "padding": 1}),
+         Node("c1.relu", "relu", ["c1.y"], "c1.r"),
+         Node("c2", "conv2d", ["c1.r", "c2.w"], "c2.y",
+              {"stride": 1, "padding": 1}),
+         Node("c2.relu", "relu", ["c2.y"], "c2.r"),
+         Node("gap", "global_avg_pool", ["c2.r"], "pooled"),
+         Node("fc", "gemm", ["pooled", "fc.w"], "y")],
+        {"c1.w": (rng.randn(3, 3, 16, 32) * 0.2).astype(np.float32),
+         "c2.w": (rng.randn(3, 3, 32, 32) * 0.2).astype(np.float32),
+         "fc.w": (rng.randn(32, 10) * 0.2).astype(np.float32)})
+    calib = rng.rand(4, 8, 8, 16).astype(np.float32)
+    reg = ModelRegistry(backend="xla")
+    key = reg.register_graph("obs_cnn", g, calib, QuantPolicy(
+        mode="serial", w_bits=2, a_bits=2, radix_bits=7))
+    payloads = [rng.rand(8, 8, 16).astype(np.float32) for _ in range(96)]
+    n = len(payloads)
+
+    def pass_once(svc):
+        futs = svc.submit_many(key, payloads)
+        svc.drain()
+        for f in futs:
+            f.result()
+
+    best = {False: float("inf"), True: float("inf")}
+    svc_off = InferenceService(reg, max_batch=16, max_wait_s=0.001,
+                               tracer=Tracer(enabled=False))
+    svc_on = InferenceService(reg, max_batch=16, max_wait_s=0.001,
+                              tracer=Tracer(enabled=True))
+    with svc_off, svc_on:
+        for svc in (svc_off, svc_on):
+            svc.warmup()
+            pass_once(svc)          # close every jit cache pre-timing
+        for _ in range(4):          # interleaved A/B rounds, best-of
+            for enabled, svc in ((False, svc_off), (True, svc_on)):
+                t0 = time.perf_counter()
+                pass_once(svc)
+                best[enabled] = min(best[enabled],
+                                    time.perf_counter() - t0)
+        tstats = svc_on.tracer.stats()
+        off_buffered = svc_off.tracer.stats()["buffered"]
+    dis, en = best[False], best[True]
+    overhead = (en - dis) / dis * 100.0
+    _emit("bench_obs_tracing_disabled", dis / n * 1e6,
+          f"{n/dis:.1f} req/s, tracer off "
+          f"({off_buffered} spans buffered)", group="obs")
+    _emit("bench_obs_tracing_enabled", en / n * 1e6,
+          f"{n/en:.1f} req/s, tracer on sample_every=1 "
+          f"({tstats['buffered']} spans, {tstats['sampled']} requests "
+          "sampled)", group="obs")
+    # us_per_call carries the clamped percentage so CI can gate on the
+    # numeric field; derived keeps the signed value for the report.
+    _emit("bench_obs_tracing_overhead_pct", max(overhead, 0.0),
+          f"{overhead:+.2f}% enabled vs disabled (<=5% gated); "
+          f"absolute {(en - dis)/n*1e6:+.1f}us/req", group="obs")
+
+    # ---- metric write path: a disabled registry must cost ~nothing
+    on = MetricsRegistry().counter("bench_writes_total")
+    off = MetricsRegistry(enabled=False).counter("bench_writes_total")
+    writes = 50_000
+
+    def spin(c):
+        for _ in range(writes):
+            c.inc()
+
+    ns_on = _time_us(lambda: spin(on), n=1, warmup=1, repeat=5) \
+        / writes * 1e3
+    ns_off = _time_us(lambda: spin(off), n=1, warmup=1, repeat=5) \
+        / writes * 1e3
+    # _ns rows: us_per_call holds nanoseconds (a sub-0.1us value would
+    # round to zero in the JSON dump and be ungateable)
+    _emit("bench_obs_counter_inc_enabled_ns", ns_on,
+          f"{ns_on:.0f} ns/inc, labelled counter write", group="obs")
+    _emit("bench_obs_counter_inc_disabled_ns", ns_off,
+          f"{ns_off:.0f} ns/inc — one enabled-flag check "
+          f"({ns_on/max(ns_off, 1e-9):.1f}x cheaper than enabled)",
+          group="obs")
+
+
 def bench_lm():
     """Continuous-batching LM decode vs the static chunked baseline.
 
@@ -883,6 +990,7 @@ GROUPS = {
     "distributed": [bench_distributed],
     "coldstart": [bench_coldstart],
     "lm": [bench_lm],
+    "obs": [bench_obs],
     "roofline": [roofline_summary],
 }
 
@@ -913,6 +1021,9 @@ def main(argv=None) -> None:
     ap.add_argument("--lm-json", default="BENCH_lm.json",
                     help="path for the continuous-batching LM rows dump "
                          "('' disables)")
+    ap.add_argument("--obs-json", default="BENCH_obs.json",
+                    help="path for the observability overhead rows dump "
+                         "('' disables)")
     args = ap.parse_args(argv)
     groups = list(GROUPS) if not args.only else [
         g.strip() for g in args.only.split(",") if g.strip()]
@@ -932,7 +1043,8 @@ def main(argv=None) -> None:
                    "serving": args.serving_json,
                    "distributed": args.distributed_json,
                    "coldstart": args.coldstart_json,
-                   "lm": args.lm_json}
+                   "lm": args.lm_json,
+                   "obs": args.obs_json}
     for grp, path in group_paths.items():
         keys = _GROUP_KEYS[grp]
         if not path or not keys:

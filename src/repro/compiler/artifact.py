@@ -181,19 +181,65 @@ class ArtifactStore:
     computed from the tree.
     """
 
-    def __init__(self, root: str):
+    def __init__(self, root: str, *, metrics=None):
         self.root = str(root)
         for d in ("blobs", "programs", "refs", "tuning"):
             os.makedirs(os.path.join(self.root, d), exist_ok=True)
         self._lock = threading.Lock()
-        self.hits = 0            # program lookups served from disk
-        self.misses = 0          # program lookups that found nothing
-        self.loads = 0           # programs materialized from disk
-        self.saves = 0           # programs written
-        self.blob_writes = 0
-        self.blob_dedups = 0     # put_array calls that found the blob
-        self.logical_bytes = 0   # bytes referenced by saved programs
+        # registry-backed session counters (writes under self._lock stay
+        # exact); the legacy attribute names remain as properties
+        from repro.obs.metrics import MetricsRegistry
+        self.metrics_registry = (metrics if metrics is not None
+                                 else MetricsRegistry())
+        m = self.metrics_registry
+        self._c_hits = m.counter("artifact_hits_total",
+                                 "program lookups served from disk")
+        self._c_misses = m.counter("artifact_misses_total",
+                                   "program lookups that found nothing")
+        self._c_loads = m.counter("artifact_loads_total",
+                                  "programs materialized from disk")
+        self._c_saves = m.counter("artifact_saves_total",
+                                  "programs written")
+        self._c_blob_writes = m.counter("artifact_blob_writes_total",
+                                        "blobs written")
+        self._c_blob_dedups = m.counter(
+            "artifact_blob_dedups_total",
+            "put_array calls that found the blob")
+        self._c_logical_bytes = m.counter(
+            "artifact_logical_bytes_total",
+            "bytes referenced by saved programs")
+        self._h_load = m.histogram(
+            "artifact_load_seconds", "program load wall time")
         self._load_ms: List[float] = []
+
+    # legacy attribute surface, now registry-backed
+    @property
+    def hits(self) -> int:
+        return int(self._c_hits.value())
+
+    @property
+    def misses(self) -> int:
+        return int(self._c_misses.value())
+
+    @property
+    def loads(self) -> int:
+        return int(self._c_loads.value())
+
+    @property
+    def saves(self) -> int:
+        return int(self._c_saves.value())
+
+    @property
+    def blob_writes(self) -> int:
+        return int(self._c_blob_writes.value())
+
+    @property
+    def blob_dedups(self) -> int:
+        return int(self._c_blob_dedups.value())
+
+    @property
+    def logical_bytes(self) -> int:
+        return int(self._c_logical_bytes.value())
 
     # ------------------------------------------------------------- paths
     def _blob_path(self, digest: str) -> str:
@@ -222,11 +268,11 @@ class ArtifactStore:
         digest = array_digest(a)
         path = self._blob_path(digest)
         with self._lock:
-            self.logical_bytes += a.nbytes
+            self._c_logical_bytes.inc(a.nbytes)
             if os.path.exists(path):
-                self.blob_dedups += 1
+                self._c_blob_dedups.inc()
                 return digest
-            self.blob_writes += 1
+            self._c_blob_writes.inc()
         import io
         buf = io.BytesIO()
         np.save(buf, a, allow_pickle=False)
@@ -261,7 +307,7 @@ class ArtifactStore:
         if not os.path.exists(path):
             self._atomic_write(path, payload)
         with self._lock:
-            self.saves += 1
+            self._c_saves.inc()
         return ref
 
     def get_program(self, ref: str) -> Dict:
@@ -430,16 +476,17 @@ class ArtifactStore:
     # ------------------------------------------------------- accounting
     def _note_hit(self) -> None:
         with self._lock:
-            self.hits += 1
+            self._c_hits.inc()
 
     def _note_miss(self) -> None:
         with self._lock:
-            self.misses += 1
+            self._c_misses.inc()
 
     def _note_load(self, ms: float) -> None:
         with self._lock:
-            self.loads += 1
+            self._c_loads.inc()
             self._load_ms.append(ms)
+            self._h_load.observe(ms / 1e3)
             if len(self._load_ms) > 4096:
                 del self._load_ms[:-4096]
 

@@ -222,7 +222,8 @@ class BucketedRunner:
     def __init__(self, program, *, max_batch: int = 32,
                  backend: Optional[str] = None,
                  interpret: Optional[bool] = None,
-                 mesh=None, banks=None, replica_cache=None):
+                 mesh=None, banks=None, replica_cache=None,
+                 metrics=None):
         import threading
         if mesh is not None and banks is not None:
             raise ValueError("pass mesh= (sharded) or banks= (placed), "
@@ -259,10 +260,24 @@ class BucketedRunner:
                                            interpret=interpret))
         self._seen: Set[tuple] = set()   # (bank, bucket) jit-cache keys
         # counters mutate on the serving worker while metrics() snapshots
-        # them from user threads
+        # them from user threads; registry-backed (writes under self._lock
+        # keep the totals exact), legacy attribute names stay as properties
         self._lock = threading.Lock()
-        self.compiles = 0
-        self.hits = 0
+        from repro.obs.metrics import MetricsRegistry
+        self.metrics_registry = (metrics if metrics is not None
+                                 else MetricsRegistry())
+        self._c_compiles = self.metrics_registry.counter(
+            "runner_bucket_compiles_total", "new (bank, bucket) jit keys")
+        self._c_hits = self.metrics_registry.counter(
+            "runner_bucket_hits_total", "warm (bank, bucket) jit hits")
+
+    @property
+    def compiles(self) -> int:
+        return int(self._c_compiles.value())
+
+    @property
+    def hits(self) -> int:
+        return int(self._c_hits.value())
 
     def __call__(self, x, *, bank: Optional[int] = None):
         x = jnp.asarray(x)
@@ -281,10 +296,10 @@ class BucketedRunner:
             key = (0, b)
         with self._lock:
             if key in self._seen:
-                self.hits += 1
+                self._c_hits.inc()
             else:
                 self._seen.add(key)
-                self.compiles += 1
+                self._c_compiles.inc()
         if self._sharded is not None:
             return self._sharded(x)[:n]
         if self._banks is not None:

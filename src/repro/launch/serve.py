@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import threading
 import time
 from typing import List, Optional
 
@@ -38,6 +39,68 @@ from repro.models.transformer import (ModelConfig, decode_step, init_params,
                                       pack_params, prefill, serve_policy)
 
 __all__ = ["Server", "GenRequest", "CNNServer", "make_lm_engine"]
+
+
+class _ObsSession:
+    """``--trace-out`` / ``--metrics-port`` / ``--metrics-every`` wiring
+    for one demo run, plus the single console writer.
+
+    Every output line — the demo's own prints *and* the periodic metrics
+    dump — goes through :meth:`emit` under one lock, so the dump thread
+    can never tear a demo line mid-print (the interleaving bug the
+    periodic snapshots used to have)."""
+
+    def __init__(self, service, *, trace_out: Optional[str] = None,
+                 metrics_port: Optional[int] = None,
+                 metrics_every: float = 0.0):
+        self.service = service
+        self.trace_out = trace_out
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._http = None
+        self._dumper = None
+        if metrics_port is not None:
+            from repro.obs import start_metrics_server
+            self._http = start_metrics_server(metrics_port,
+                                              service.registries)
+            port = self._http.server.server_address[1]
+            self.emit(f"metrics: serving Prometheus text on "
+                      f"http://127.0.0.1:{port}/metrics")
+        if metrics_every and metrics_every > 0:
+            self._dumper = threading.Thread(
+                target=self._dump_loop, args=(float(metrics_every),),
+                name="metrics-dump", daemon=True)
+            self._dumper.start()
+
+    def emit(self, *lines) -> None:
+        """The single writer: one locked print per call."""
+        with self._lock:
+            print("\n".join(str(l) for l in lines), flush=True)
+
+    def _dump_loop(self, every: float) -> None:
+        while not self._stop.wait(every):
+            m = self.service.metrics()
+            self.emit(f"[metrics] completed={m['completed']} "
+                      f"failed={m['failed']} requeues={m['requeues']} "
+                      f"queue={m['queue_depth']} "
+                      f"p50={m['latency_p50_ms']}ms "
+                      f"p99={m['latency_p99_ms']}ms")
+
+    def close(self) -> None:
+        self._stop.set()
+        if self._dumper is not None:
+            self._dumper.join(timeout=5)
+        if self._http is not None:
+            self._http.server.shutdown()
+        if self.trace_out:
+            from repro.obs import write_chrome_trace
+            path = write_chrome_trace(self.service.tracer, self.trace_out)
+            st = self.service.tracer.stats()
+            self.emit(f"trace: {st['buffered']} spans "
+                      f"({st['sampled']}/{st['started']} requests sampled) "
+                      f"-> {path}",
+                      "       load it in https://ui.perfetto.dev or run "
+                      f"`python -m repro.launch.serve trace {path}`")
 
 
 @dataclasses.dataclass
@@ -297,42 +360,46 @@ def _main_cnn(args, cfg) -> None:
     server = CNNServer(backend=backend, interpret=args.interpret,
                        n_banks=args.banks, placement=args.placement,
                        store=args.store, artifact=args.artifact)
+    obs = _ObsSession(server.service, trace_out=args.trace_out,
+                      metrics_port=args.metrics_port,
+                      metrics_every=args.metrics_every)
     if args.store:
         t0 = time.perf_counter()
         report = server.warm_boot()
-        print(f"warm boot in {(time.perf_counter()-t0)*1e3:.0f}ms: "
-              f"restored={report['restored']} "
-              f"compiled={report['compiled']} "
-              f"bucket_compiles={report['bucket_compiles']}")
+        obs.emit(f"warm boot in {(time.perf_counter()-t0)*1e3:.0f}ms: "
+                 f"restored={report['restored']} "
+                 f"compiled={report['compiled']} "
+                 f"bucket_compiles={report['bucket_compiles']}")
     if args.banks and args.banks > 1:
-        print(f"serving across {server.service.n_banks} MVU banks "
-              f"(placement={server.service.placement})")
+        obs.emit(f"serving across {server.service.n_banks} MVU banks "
+                 f"(placement={server.service.placement})")
     rng = np.random.RandomState(0)
     images = rng.rand(args.batch, 32, 32, 3).astype(np.float32)
     server.classify(images)  # warmup/compile
     t0 = time.perf_counter()
     logits = server.classify(images)
     dt = time.perf_counter() - t0
-    print(f"classified {len(logits)} images in {dt*1e3:.1f}ms "
-          f"({len(logits)/dt:.1f} img/s, compiled path, "
-          f"backend={backend})")
-    print("sample logits:", logits[0, :4])
+    obs.emit(f"classified {len(logits)} images in {dt*1e3:.1f}ms "
+             f"({len(logits)/dt:.1f} img/s, compiled path, "
+             f"backend={backend})",
+             f"sample logits: {logits[0, :4]}")
     m = server.metrics()
-    print(f"serving: p50={m['latency_p50_ms']}ms "
-          f"p99={m['latency_p99_ms']}ms "
-          f"bucket_caches={m['bucket_caches']}")
+    obs.emit(f"serving: p50={m['latency_p50_ms']}ms "
+             f"p99={m['latency_p99_ms']}ms "
+             f"bucket_caches={m['bucket_caches']}")
     if m["banks"]["n_banks"] > 1:
         sched = m["scheduler"]
-        print(f"banks: util={sched['bank_utilization']} "
-              f"requests={sched['bank_requests']} "
-              f"replica_cache={m['banks']['replica_cache']}")
+        obs.emit(f"banks: util={sched['bank_utilization']} "
+                 f"requests={sched['bank_requests']} "
+                 f"replica_cache={m['banks']['replica_cache']}")
     if args.store:
         st = m["artifact_store"]
-        print(f"artifact store: hits={st['hits']} misses={st['misses']} "
-              f"loads={st['loads']} load_p50={st['load_p50_ms']}ms "
-              f"bytes_on_disk={st['bytes_on_disk']} "
-              f"dedup_ratio={st['dedup_ratio']}")
-    print(server.cycle_report())
+        obs.emit(f"artifact store: hits={st['hits']} misses={st['misses']} "
+                 f"loads={st['loads']} load_p50={st['load_p50_ms']}ms "
+                 f"bytes_on_disk={st['bytes_on_disk']} "
+                 f"dedup_ratio={st['dedup_ratio']}")
+    obs.emit(server.cycle_report())
+    obs.close()
     server.close()
 
 
@@ -422,12 +489,41 @@ def _main_compile(argv) -> None:
           f"dedup_ratio={st['dedup_ratio']}")
 
 
+def _main_trace(argv) -> None:
+    """Summarize a saved Chrome trace: top-k slowest requests by phase."""
+    import json
+    from repro.obs import format_trace_summary, trace_summary
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.serve trace",
+        description="pretty-print a saved --trace-out file: the top-k "
+                    "slowest requests with per-phase wall breakdowns")
+    ap.add_argument("file", help="Chrome trace JSON from --trace-out")
+    ap.add_argument("--top-k", type=int, default=10)
+    args = ap.parse_args(argv)
+    with open(args.file) as f:
+        doc = json.load(f)
+    print(format_trace_summary(trace_summary(doc, top_k=args.top_k)))
+    other = doc.get("otherData", {})
+    st = other.get("tracer")
+    if st:
+        print(f"tracer: {st['sampled']}/{st['started']} requests sampled, "
+              f"{st['buffered']} spans buffered "
+              f"(sample_every={st['sample_every']})")
+    domains = other.get("domains")
+    if domains:
+        print("domains: " + "; ".join(f"{k}: {v}"
+                                      for k, v in domains.items()))
+
+
 def main():
     import sys
     if len(sys.argv) > 1 and sys.argv[1] == "compile":
         # offline code-generator run (kept out of argparse subparsers so
         # the plain `--arch ...` serving invocation stays unchanged)
         _main_compile(sys.argv[2:])
+        return
+    if len(sys.argv) > 1 and sys.argv[1] == "trace":
+        _main_trace(sys.argv[2:])
         return
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -456,6 +552,16 @@ def main():
                     help="serve a precompiled artifact by its store tag "
                          "(requires --store; CNN path; skips graph build, "
                          "calibration, and the autotuner entirely)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the run's request trace as Chrome trace "
+                         "JSON (Perfetto-loadable; summarize with the "
+                         "`trace` subcommand)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus text on 127.0.0.1:PORT/metrics "
+                         "for the duration of the run (0 = any free port)")
+    ap.add_argument("--metrics-every", type=float, default=0.0,
+                    help="dump a one-line metrics snapshot every S seconds "
+                         "through the single console writer (0 = off)")
     args = ap.parse_args()
     if args.artifact and not args.store:
         ap.error("--artifact requires --store")
@@ -493,27 +599,34 @@ def main():
             m_long if i % 4 == 0 else max(1, m_long // 4))
             for i in range(n_load)]
         with InferenceService(registry, max_wait_s=0.0) as svc:
+            obs = _ObsSession(svc, trace_out=args.trace_out,
+                              metrics_port=args.metrics_port,
+                              metrics_every=args.metrics_every)
             t0 = time.perf_counter()
             futures = svc.submit_many(key, reqs)
             svc.drain()
             dt = time.perf_counter() - t0
             out = [f.result() for f in futures]
             m = svc.metrics()
-        total = sum(len(r.out_tokens) for r in out)
-        em = m["engines"][str(key)]
-        print(f"generated {total} tokens over {len(out)} requests in "
-              f"{dt:.2f}s ({total/dt:.1f} tok/s, continuous batching, "
-              f"quantized={not args.no_quant})")
-        print(f"engine: occupancy={em['slot_occupancy']} "
-              f"decode_steps={em['decode_steps']} "
-              f"recompiles_after_warmup="
-              f"{em['jit']['recompiles_after_warmup']} "
-              f"scheduler_steps={m['scheduler']['admitted_batches']}")
-        print("sample:", out[0].out_tokens)
+            total = sum(len(r.out_tokens) for r in out)
+            em = m["engines"][str(key)]
+            obs.emit(f"generated {total} tokens over {len(out)} requests "
+                     f"in {dt:.2f}s ({total/dt:.1f} tok/s, continuous "
+                     f"batching, quantized={not args.no_quant})",
+                     f"engine: occupancy={em['slot_occupancy']} "
+                     f"decode_steps={em['decode_steps']} "
+                     f"recompiles_after_warmup="
+                     f"{em['jit']['recompiles_after_warmup']} "
+                     f"scheduler_steps={m['scheduler']['admitted_batches']}",
+                     f"sample: {out[0].out_tokens}")
+            obs.close()
         return
     print(f"note: family={cfg.family!r} doesn't fit the continuous slot "
           "arena (SSM/hybrid state, rolling windows, or encoder inputs) — "
           "serving via the static batch path")
+    if args.trace_out or args.metrics_port is not None or args.metrics_every:
+        print("note: --trace-out/--metrics-port/--metrics-every apply to "
+              "the serving-runtime paths only (static batch has no spine)")
     server = Server(cfg, batch_slots=args.batch, max_len=max_len,
                     quantized=not args.no_quant, backend=args.backend,
                     interpret=args.interpret or None)

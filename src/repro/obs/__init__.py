@@ -1,0 +1,31 @@
+"""Observability subsystem: HPM-style counters, request tracing, exporters.
+
+Three layers (DESIGN.md §9):
+
+* :mod:`repro.obs.metrics` — typed ``Counter``/``Gauge``/``Histogram``
+  registry, the substrate every ``metrics()``/``stats()`` surface on the
+  serving spine reads from;
+* :mod:`repro.obs.hpm` — the RISC-V HPM-counter-file analogue for the
+  barrel controller: per-hart busy/xfer/issue/stall cycles with per-tag and
+  per-precision attribution (``busy + xfer == SimReport.per_mvu_busy``);
+* :mod:`repro.obs.tracing` + :mod:`repro.obs.export` — request-scoped
+  spans in two clock domains (wall ns / virtual MVU cycles), bounded +
+  sampled, exported as Perfetto-loadable Chrome trace JSON and Prometheus
+  text.
+"""
+
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      DEFAULT_BUCKETS)
+from .hpm import HPMCounters, HPMCounterFile, precision_key
+from .tracing import Span, TraceContext, Tracer
+from .export import (chrome_trace, write_chrome_trace, prometheus_text,
+                     trace_summary, format_trace_summary,
+                     start_metrics_server)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "DEFAULT_BUCKETS",
+    "HPMCounters", "HPMCounterFile", "precision_key",
+    "Span", "TraceContext", "Tracer",
+    "chrome_trace", "write_chrome_trace", "prometheus_text",
+    "trace_summary", "format_trace_summary", "start_metrics_server",
+]

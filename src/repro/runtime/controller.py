@@ -21,6 +21,7 @@ from typing import Callable, Dict, List, Optional
 
 from repro.core.codegen import CommandStream
 from repro.core.mvu import MVUJob, OpKind, MVU_COUNT
+from repro.obs.hpm import HPMCounters, precision_key
 
 __all__ = ["BarrelController", "SimReport"]
 
@@ -35,6 +36,11 @@ class SimReport:
     # next ``simulate`` call so consecutive streams share the fabric (the
     # serving scheduler's admission clock)
     hart_free: List[int] = dataclasses.field(default_factory=list)
+    # HPM counter deltas for this call: per-hart busy/xfer/issue/stall plus
+    # per-tag and per-precision attribution. Per-call (not cumulative) so
+    # the scheduler can simulate tentatively on every bank and merge only
+    # the committed report into its counter file.
+    hpm: Optional[HPMCounters] = None
 
     @property
     def utilization(self) -> float:
@@ -81,13 +87,21 @@ class BarrelController:
         if len(hart_free) != self.harts:
             raise ValueError(f"hart_free must have {self.harts} entries")
         busy = [0] * self.harts
+        hpm = HPMCounters.empty(self.harts)
         for i, job in enumerate(jobs):
             dep_ready = max((end[d] for d in job.depends_on), default=0)
+            op = job.op.value
+            hpm.jobs[op] = hpm.jobs.get(op, 0) + 1
             if job.op == OpKind.HOST:
                 start[i] = dep_ready
                 end[i] = dep_ready  # host work is off the accelerator clock
                 continue
             h = job.mvu % self.harts
+            # stall: the hart was free but its input hadn't arrived yet —
+            # dependency wait, as distinct from the hart simply being busy
+            if dep_ready > hart_free[h]:
+                hpm.stall[h] += dep_ready - hart_free[h]
+            hpm.issue[h] += self.issue_overhead
             t0 = max(dep_ready, hart_free[h]) + self.issue_overhead
             dur = (job.cycles if job.op != OpKind.XFER
                    else xfer_cycles_per_job) * cycle_scale
@@ -95,20 +109,31 @@ class BarrelController:
             end[i] = t0 + dur
             hart_free[h] = end[i]
             busy[h] += dur
+            if job.op == OpKind.XFER:
+                hpm.xfer[h] += dur
+            else:
+                hpm.busy[h] += dur
+                pk = precision_key(job.a_bits, job.w_bits)
+                hpm.per_precision[pk] = hpm.per_precision.get(pk, 0) + dur
+            if job.tag:
+                hpm.per_tag[job.tag] = hpm.per_tag.get(job.tag, 0) + dur
         return SimReport(makespan_cycles=max(end, default=0),
                          per_job_start=start, per_job_end=end,
-                         per_mvu_busy=busy, hart_free=hart_free)
+                         per_mvu_busy=busy, hart_free=hart_free, hpm=hpm)
 
     # ------------------------------------------------------------- real exec
     def register(self, op: OpKind, fn: Callable) -> None:
         """``fn(job, env) -> None`` mutates the tensor environment."""
         self._executors[op] = fn
 
-    def execute(self, stream: CommandStream, env: Dict[str, object]) -> Dict:
+    def execute(self, stream: CommandStream, env: Dict[str, object], *,
+                hpm=None) -> Dict:
         """Run every job in dependency order against real tensors.
 
         ``env`` maps tensor names to arrays; executors read/write it. The
         per-job ``tag`` identifies which layer/tensors a job touches.
+        Pass an :class:`~repro.obs.hpm.HPMCounterFile` as ``hpm`` to count
+        dispatched jobs (and their modelled cycles) on the real path.
         """
         done = set()
         for i, job in enumerate(stream.jobs):
@@ -119,5 +144,7 @@ class BarrelController:
             fn = self._executors.get(job.op)
             if fn is not None:
                 fn(job, env)
+            if hpm is not None:
+                hpm.record_executed_job(job)
             done.add(i)  # completion interrupt
         return env

@@ -20,11 +20,27 @@ from repro.runtime.checkpoint import CheckpointManager
 
 log = logging.getLogger("repro.ft")
 
-__all__ = ["FailureInjector", "TrainSupervisor", "WorkerFailure"]
+__all__ = ["BankFailure", "FailureInjector", "TrainSupervisor",
+           "WorkerFailure"]
 
 
 class WorkerFailure(RuntimeError):
     """A (simulated) node loss / preemption / hardware fault."""
+
+
+class BankFailure(WorkerFailure):
+    """One MVU bank (device) failed mid-batch on the *serving* path.
+
+    Unlike a training ``WorkerFailure`` (checkpoint/restart),
+    :class:`~repro.serving.service.InferenceService` treats this as
+    transient: the affected micro-batch's requests are **requeued** through
+    the batcher (bounded by ``max_retries``, counted by the
+    ``service_requeues_total`` metric) so a flaky bank costs latency, not
+    errors."""
+
+    def __init__(self, msg: str, bank: Optional[int] = None):
+        super().__init__(msg)
+        self.bank = bank
 
 
 @dataclasses.dataclass

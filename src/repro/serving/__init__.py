@@ -26,6 +26,16 @@ scheduler books ``n_banks x 8`` slots, weight planes replicate once per
 device, and micro-batches either load-balance across banks
 (``placement="banked"``) or split evenly over all of them
 (``placement="sharded"``).
+
+Observability (:mod:`repro.obs`): the service threads one
+:class:`~repro.obs.metrics.MetricsRegistry` and one
+:class:`~repro.obs.tracing.Tracer` through every component it constructs —
+every legacy ``metrics()``/``stats()`` dict is registry-backed, each
+request carries a trace context (queue/schedule/execute/finalize spans in
+wall-ns *and* virtual MVU cycles), and the scheduler keeps per-bank HPM
+counter files (per-hart busy/xfer/issue/stall with per-tag/per-precision
+attribution). Export via :func:`repro.obs.write_chrome_trace` (Perfetto)
+and :func:`repro.obs.prometheus_text` over ``service.registries()``.
 """
 
 from repro.serving.batcher import (DynamicBatcher, MicroBatch, QueueFull,

@@ -29,6 +29,7 @@ from typing import Deque, Dict, List, Optional
 
 import collections
 
+from repro.obs.metrics import MetricsRegistry
 from repro.serving.registry import ModelKey
 
 __all__ = ["Request", "MicroBatch", "DynamicBatcher", "QueueFull"]
@@ -44,12 +45,17 @@ class Request:
 
     ``payload``: a single example (no batch axis) for Program variants, or
     an arbitrary engine-specific object for callable variants.
+    ``trace`` carries the request's
+    :class:`~repro.obs.tracing.TraceContext` through the spine; ``retries``
+    counts bank-failure requeues (see ``InferenceService._run_batch``).
     """
 
     key: ModelKey
     payload: object
     future: Future = dataclasses.field(default_factory=Future)
     t_submit: float = dataclasses.field(default_factory=time.perf_counter)
+    trace: object = None
+    retries: int = 0
 
 
 @dataclasses.dataclass
@@ -75,7 +81,8 @@ class DynamicBatcher:
     """
 
     def __init__(self, *, max_batch: int = 32, max_wait_s: float = 0.002,
-                 max_queue: int = 256, round_to: int = 1):
+                 max_queue: int = 256, round_to: int = 1,
+                 metrics: Optional[MetricsRegistry] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if round_to < 1:
@@ -88,14 +95,36 @@ class DynamicBatcher:
         self._cv = threading.Condition()
         self._depth = 0
         self._closed = False
-        self.enqueued = 0
-        self.batches = 0
-        self.peak_depth = 0
+        # registry-backed counters (every write happens under self._cv, so
+        # the totals stay exact despite the registry's lock-free writes)
+        self.metrics_registry = (metrics if metrics is not None
+                                 else MetricsRegistry())
+        m = self.metrics_registry
+        self._c_enqueued = m.counter("batcher_enqueued_total",
+                                     "requests accepted into the queue")
+        self._c_batches = m.counter("batcher_batches_total",
+                                    "micro-batches formed")
+        self._g_peak = m.gauge("batcher_peak_depth",
+                               "queue depth high-water mark")
+        self._g_depth = m.gauge("batcher_depth", "current queue depth")
 
     @property
     def depth(self) -> int:
         """Requests currently queued (not yet handed to a worker)."""
         return self._depth
+
+    # legacy attribute surface, now registry-backed
+    @property
+    def enqueued(self) -> int:
+        return int(self._c_enqueued.value())
+
+    @property
+    def batches(self) -> int:
+        return int(self._c_batches.value())
+
+    @property
+    def peak_depth(self) -> int:
+        return int(self._g_peak.value())
 
     # ------------------------------------------------------------- producer
     def put(self, req: Request, *, block: bool = True,
@@ -120,8 +149,9 @@ class DynamicBatcher:
                         raise RuntimeError("batcher is closed")
             self._queues.setdefault(req.key, collections.deque()).append(req)
             self._depth += 1
-            self.enqueued += 1
-            self.peak_depth = max(self.peak_depth, self._depth)
+            self._c_enqueued.inc()
+            self._g_peak.set_max(self._depth)
+            self._g_depth.set(self._depth)
             self._cv.notify_all()
 
     # ------------------------------------------------------------- consumer
@@ -155,7 +185,8 @@ class DynamicBatcher:
                             take -= take % self.round_to
                         reqs = [q.popleft() for _ in range(take)]
                         self._depth -= take
-                        self.batches += 1
+                        self._c_batches.inc()
+                        self._g_depth.set(self._depth)
                         self._cv.notify_all()
                         return MicroBatch(key, reqs)
                     wait = window_end - now
@@ -193,5 +224,6 @@ class DynamicBatcher:
                     q.popleft().future.set_exception(exc)
                     n += 1
             self._depth = 0
+            self._g_depth.set(0)
             self._cv.notify_all()
         return n

@@ -64,6 +64,9 @@ from repro.core.cost_model import LinearLayer
 from repro.models.transformer import (ModelConfig, decode_step, init_caches,
                                       init_params, layer_groups, pack_params,
                                       prefill, serve_policy)
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracing import TraceContext, now_ns
+from repro.runtime.straggler import StragglerDetector
 
 __all__ = ["ContinuousLMEngine", "supports_continuous", "decode_cost_stream"]
 
@@ -173,6 +176,34 @@ class ContinuousLMEngine:
         self.calls: collections.Counter = collections.Counter()
         self.warmup_compiles: Optional[int] = None
 
+        # registry backing the serving counters (engine_metrics() reads it;
+        # the service merges it into the /metrics exposition)
+        self.metrics_registry = MetricsRegistry()
+        m = self.metrics_registry
+        self._c_compiles = m.counter("lm_jit_compiles_total",
+                                     "jit trace-time cache misses")
+        self._c_calls = m.counter("lm_jit_calls_total", "jitted-fn calls")
+        self._c_tokens = m.counter("lm_tokens_out_total",
+                                   "tokens produced")
+        self._c_completed = m.counter("lm_completed_total",
+                                      "requests finished")
+        self._c_inserts = m.counter("lm_prefill_inserts_total",
+                                    "prompts prefilled into the arena")
+        self._c_steps = m.counter("lm_decode_steps_total",
+                                  "arena-wide decode steps")
+        self._c_slot_steps = m.counter("lm_occupied_slot_steps_total",
+                                       "active slots summed over steps")
+        self._c_busy = m.counter("lm_busy_seconds_total",
+                                 "wall seconds inside serve()")
+        self._g_queue_peak = m.gauge("lm_queue_peak",
+                                     "engine-queue high-water mark")
+
+        # per-decode-step anomaly detection: the same MAD detector the
+        # service runs on CNN batches, here at step granularity so one
+        # GC-paused / contended arena step is flagged, not averaged away
+        self.step_straggler = StragglerDetector(window=64)
+        self._step_seq = 0
+
         self._prefill = self._counted("prefill", self._prefill_fn)
         self._insert = self._counted("insert", self._insert_fn)
         self._step = self._counted("decode", self._step_fn)
@@ -184,6 +215,8 @@ class ContinuousLMEngine:
         # scheduler hook (bind_runtime): book cycles per decode step
         self._scheduler = None
         self._sched_key = None
+        self._tracer = None
+        self._trace_ctx = None
         self.step_stream = decode_cost_stream(cfg)
 
         # serving metrics (reset by warmup so it doesn't count)
@@ -193,11 +226,13 @@ class ContinuousLMEngine:
     def _counted(self, name, fn):
         def traced(*args):
             self.compiles[name] += 1
+            self._c_compiles.inc(fn=name)
             return fn(*args)
         jitted = jax.jit(traced)
 
         def call(*args):
             self.calls[name] += 1
+            self._c_calls.inc(fn=name)
             return jitted(*args)
         return call
 
@@ -254,21 +289,54 @@ class ContinuousLMEngine:
         return caches, tok, pos
 
     def _reset_serving_metrics(self):
-        self.tokens_out = 0
-        self.completed = 0
-        self.prefill_inserts = 0
-        self.decode_steps = 0
-        self.occupied_slot_steps = 0
-        self.queue_peak = 0
-        self.busy_seconds = 0.0
+        for c in (self._c_tokens, self._c_completed, self._c_inserts,
+                  self._c_steps, self._c_slot_steps, self._c_busy,
+                  self._g_queue_peak):
+            c.clear()
         self._latencies = collections.deque(maxlen=4096)
 
+    # legacy attribute surface, now registry-backed
+    @property
+    def tokens_out(self) -> int:
+        return int(self._c_tokens.value())
+
+    @property
+    def completed(self) -> int:
+        return int(self._c_completed.value())
+
+    @property
+    def prefill_inserts(self) -> int:
+        return int(self._c_inserts.value())
+
+    @property
+    def decode_steps(self) -> int:
+        return int(self._c_steps.value())
+
+    @property
+    def occupied_slot_steps(self) -> int:
+        return int(self._c_slot_steps.value())
+
+    @property
+    def queue_peak(self) -> int:
+        return int(self._g_queue_peak.value())
+
+    @property
+    def busy_seconds(self) -> float:
+        return self._c_busy.value()
+
     # ------------------------------------------------------------- runtime
-    def bind_runtime(self, scheduler, key) -> None:
+    def bind_runtime(self, scheduler, key, *, tracer=None) -> None:
         """Book the SlotScheduler per decode step (called by
-        InferenceService on first dispatch; idempotent)."""
+        InferenceService on first dispatch; idempotent). ``tracer`` makes
+        the engine emit one span per arena decode step (wall + booked
+        cycles) on the ``lm-decode`` track."""
         self._scheduler = scheduler
         self._sched_key = key
+        if tracer is not None:
+            self._tracer = tracer
+            # trace_id 0 = tracker spans (not tied to one request); always
+            # sampled — the decode loop is one track, not per-request
+            self._trace_ctx = TraceContext(0, True, 0, tracer)
 
     def validate(self, requests: Sequence) -> None:
         for i, r in enumerate(requests):
@@ -296,7 +364,7 @@ class ContinuousLMEngine:
             caches, tok, pos = self._state
             slots: List[Optional[_Slot]] = [None] * self.batch_slots
             queue = collections.deque(requests)
-            self.queue_peak = max(self.queue_peak, len(queue))
+            self._g_queue_peak.set_max(len(queue))
             colcache: dict = {}   # id(device col) -> np array, one D2H each
 
             def finish(si: int) -> None:
@@ -310,8 +378,8 @@ class ContinuousLMEngine:
                     # the prefill token is (1,); decode columns are (B, 1)
                     vals.append(int(arr[0] if arr.ndim == 1 else arr[si, 0]))
                 s.req.out_tokens = vals
-                self.tokens_out += len(vals)
-                self.completed += 1
+                self._c_tokens.inc(len(vals))
+                self._c_completed.inc()
                 self._latencies.append(time.perf_counter() - s.t0)
                 slots[si] = None
 
@@ -323,7 +391,7 @@ class ContinuousLMEngine:
                         r = queue.popleft()
                         if r.max_new_tokens == 0:
                             r.out_tokens = []
-                            self.completed += 1
+                            self._c_completed.inc()
                             self._latencies.append(0.0)
                             continue
                         L = len(r.prompt)
@@ -336,7 +404,7 @@ class ContinuousLMEngine:
                         caches, tok, pos = self._insert(
                             caches, pref, tok, pos, si, tok0,
                             jnp.asarray(L, jnp.int32))
-                        self.prefill_inserts += 1
+                        self._c_inserts.inc()
                         slots[si] = _Slot(r, r.max_new_tokens - 1, tok0,
                                           time.perf_counter())
                         if slots[si].remaining == 0:
@@ -347,6 +415,9 @@ class ContinuousLMEngine:
                     continue
                 # book this decode step on the MVU slots (per *step*, not
                 # per request: n_active tokens at the arch's precision)
+                st0 = time.perf_counter()
+                st0_ns = now_ns()
+                adm = None
                 if self._scheduler is not None:
                     adm = self._scheduler.admit(self._sched_key, n_active,
                                                 stream=self.step_stream)
@@ -354,8 +425,22 @@ class ContinuousLMEngine:
                         self._scheduler.complete(adm, adm.est_seconds)
                 tok, pos, caches = self._step(self.params, caches, tok, pos,
                                               jnp.asarray(active_np))
-                self.decode_steps += 1
-                self.occupied_slot_steps += n_active
+                self._c_steps.inc()
+                self._c_slot_steps.inc(n_active)
+                self._step_seq += 1
+                # per-step anomaly detection + (if bound) one span per
+                # arena step: wall ns here, booked cycles from admission
+                self.step_straggler.observe(self._step_seq,
+                                            time.perf_counter() - st0)
+                if self._tracer is not None and self._tracer.enabled:
+                    self._tracer.span(
+                        self._trace_ctx, "decode_step", st0_ns, now_ns(),
+                        track="lm-decode",
+                        cycle_start=(adm.start_cycle if adm is not None
+                                     else None),
+                        cycle_end=(adm.finish_cycle if adm is not None
+                                   else None),
+                        n_active=n_active)
                 # leave: finished rows free their slot at this boundary
                 for si, s in enumerate(slots):
                     if s is None:
@@ -365,7 +450,7 @@ class ContinuousLMEngine:
                     if s.remaining == 0:
                         finish(si)
             self._state = (caches, tok, pos)
-            self.busy_seconds += time.perf_counter() - t_enter
+            self._c_busy.inc(time.perf_counter() - t_enter)
         return list(requests)
 
     __call__ = serve
@@ -404,7 +489,8 @@ class ContinuousLMEngine:
         return {"compiles": dict(self.compiles),
                 "calls": dict(self.calls),
                 "total_compiles": total,
-                "recompiles_after_warmup": after}
+                "recompiles_after_warmup": after,
+                "straggler": self.step_straggler.snapshot()}
 
     def engine_metrics(self) -> dict:
         lat = sorted(self._latencies)

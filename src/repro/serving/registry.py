@@ -91,7 +91,7 @@ class ModelRegistry:
 
     def __init__(self, *, max_programs: Optional[int] = None,
                  backend: str = "xla", interpret: bool = False,
-                 store=None):
+                 store=None, metrics=None):
         self.backend = backend
         self.interpret = interpret
         self.max_programs = max_programs
@@ -114,13 +114,59 @@ class ModelRegistry:
         self._pack_cache: "weakref.WeakValueDictionary[str, object]" = \
             weakref.WeakValueDictionary()
         self._lock = threading.RLock()
-        self.compiles = 0
-        self.evictions = 0
-        self.shared_arrays = 0
-        self.shared_bytes = 0
-        self.artifact_hits = 0    # compiles avoided by a store load
-        self.artifact_saves = 0   # programs written to the store
-        self.artifact_spills = 0  # evictions that left a disk reference
+        # registry-backed counters (every write happens under self._lock,
+        # so totals stay exact); the legacy attribute names remain as
+        # read-only properties below
+        from repro.obs.metrics import MetricsRegistry
+        self.metrics_registry = (metrics if metrics is not None
+                                 else MetricsRegistry())
+        m = self.metrics_registry
+        self._c_compiles = m.counter("registry_compiles_total",
+                                     "compile_graph invocations")
+        self._c_evictions = m.counter("registry_evictions_total",
+                                      "LRU evictions")
+        self._c_shared_arrays = m.counter(
+            "registry_shared_arrays_total",
+            "packed planes deduped across variants")
+        self._c_shared_bytes = m.counter(
+            "registry_shared_bytes_total", "bytes saved by plane dedup")
+        self._c_art_hits = m.counter(
+            "registry_artifact_hits_total",
+            "compiles avoided by a store load")
+        self._c_art_saves = m.counter(
+            "registry_artifact_saves_total", "programs written to the store")
+        self._c_art_spills = m.counter(
+            "registry_artifact_spills_total",
+            "evictions that left a disk reference")
+
+    # legacy attribute surface, now registry-backed
+    @property
+    def compiles(self) -> int:
+        return int(self._c_compiles.value())
+
+    @property
+    def evictions(self) -> int:
+        return int(self._c_evictions.value())
+
+    @property
+    def shared_arrays(self) -> int:
+        return int(self._c_shared_arrays.value())
+
+    @property
+    def shared_bytes(self) -> int:
+        return int(self._c_shared_bytes.value())
+
+    @property
+    def artifact_hits(self) -> int:
+        return int(self._c_art_hits.value())
+
+    @property
+    def artifact_saves(self) -> int:
+        return int(self._c_art_saves.value())
+
+    @property
+    def artifact_spills(self) -> int:
+        return int(self._c_art_spills.value())
 
     # -------------------------------------------------------- registration
     def register_graph(self, model: str, graph, calib, policy, *,
@@ -233,10 +279,10 @@ class ModelRegistry:
             while (self.max_programs is not None
                    and len(self._lru) > self.max_programs):
                 old_key, _ = self._lru.popitem(last=False)
-                self.evictions += 1
+                self._c_evictions.inc()
                 oe = self._entries.get(old_key)
                 if oe is not None and oe.ref is not None:
-                    self.artifact_spills += 1
+                    self._c_art_spills.inc()
             return prog
 
     def _materialize(self, key: ModelKey, e: _Entry):
@@ -255,7 +301,7 @@ class ModelRegistry:
                         raise   # no recipe to fall back on — surface it
                     continue    # stale/corrupt ref: fall through to compile
                 e.ref = ref
-                self.artifact_hits += 1
+                self._c_art_hits.inc()
                 self.store._note_hit()
                 # re-assert the name tag: a hit found only through the
                 # recipe index must still be a GC root afterwards
@@ -270,13 +316,13 @@ class ModelRegistry:
         prog = compile_graph(e.graph, e.calib, policy=e.policy,
                              per_layer=e.per_layer, backend=e.backend,
                              interpret=e.interpret)
-        self.compiles += 1
+        self._c_compiles.inc()
         if self.store is not None:
             from repro.compiler.artifact import save_program
             e.ref = save_program(prog, self.store, name=str(key))
             if e.recipe is not None:
                 self.store.tag(f"recipe:{e.recipe}", e.ref)
-            self.artifact_saves += 1
+            self._c_art_saves.inc()
         return prog
 
     def warm_boot(self) -> Dict:
@@ -338,8 +384,8 @@ class ModelRegistry:
             hit = self._pack_cache.get(digest)
             if hit is not None and hit is not arr:
                 p["w_packed"] = hit   # drop the duplicate device buffer
-                self.shared_arrays += 1
-                self.shared_bytes += np.asarray(arr).nbytes
+                self._c_shared_arrays.inc()
+                self._c_shared_bytes.inc(np.asarray(arr).nbytes)
             elif hit is None:
                 try:
                     self._pack_cache[digest] = arr

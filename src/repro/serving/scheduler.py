@@ -44,6 +44,8 @@ import dataclasses
 import threading
 from typing import Dict, List, Optional, Tuple
 
+from repro.obs.hpm import HPMCounterFile
+from repro.obs.metrics import MetricsRegistry
 from repro.runtime.controller import BarrelController
 from repro.serving.registry import ModelKey
 
@@ -69,7 +71,9 @@ class Admission:
 class SlotScheduler:
     def __init__(self, *, controller: Optional[BarrelController] = None,
                  mode: str = "pipelined", n_banks: int = 1,
-                 placement: str = "banked"):
+                 placement: str = "banked",
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer=None):
         if n_banks < 1:
             raise ValueError(f"n_banks must be >= 1, got {n_banks}")
         if placement not in ("banked", "sharded"):
@@ -85,12 +89,32 @@ class SlotScheduler:
         self._hart_free: List[List[int]] = [[0] * h for _ in range(n_banks)]
         self._busy: List[List[int]] = [[0] * h for _ in range(n_banks)]
         self._streams: Dict[ModelKey, object] = {}
-        self.admitted = 0
-        self.admitted_requests = 0
-        self.unscheduled = 0          # opaque engines with no stream
-        self.wall_seconds = 0.0
-        self.bank_batches = [0] * n_banks
-        self.bank_requests = [0] * n_banks
+        # registry-backed counters: every mutation below happens under
+        # self._lock, so the totals stay exact despite the registry's
+        # lock-free write path (see obs/metrics.py)
+        self.metrics_registry = (metrics if metrics is not None
+                                 else MetricsRegistry())
+        m = self.metrics_registry
+        self._c_admitted = m.counter(
+            "scheduler_admitted_batches_total", "micro-batches booked")
+        self._c_requests = m.counter(
+            "scheduler_admitted_requests_total", "requests booked")
+        self._c_unscheduled = m.counter(
+            "scheduler_unscheduled_batches_total",
+            "batches served without a cost model")
+        self._c_wall = m.counter(
+            "scheduler_wall_seconds_total", "measured batch wall time")
+        self._c_bank_batches = m.counter(
+            "scheduler_bank_batches_total", "batches committed per bank")
+        self._c_bank_requests = m.counter(
+            "scheduler_bank_requests_total", "requests committed per bank")
+        self._g_cycles = m.gauge(
+            "scheduler_virtual_cycles", "busiest slot's busy-until cycle")
+        # the HPM counter file: one per bank, merged only on _commit (the
+        # tentative per-bank simulations in admit() never accumulate)
+        self.hpm_files = [HPMCounterFile(h, metrics=m, bank=b)
+                          for b in range(n_banks)]
+        self.tracer = tracer
 
     # --------------------------------------------------------------- stream
     def stream_for(self, key: ModelKey, program=None, stream=None):
@@ -114,15 +138,34 @@ class SlotScheduler:
             cs, hart_free=self._hart_free[bank],
             cycle_scale=max(1, batch))
 
-    def _commit(self, bank: int, rep, cs, batch: int) -> Tuple[int, int]:
+    def _commit(self, bank: int, rep, cs, batch: int,
+                label: str = "") -> Tuple[int, int]:
         started = [s for s, j in zip(rep.per_job_start, cs.jobs)
                    if j.mvu >= 0]
         start = min(started, default=rep.makespan_cycles)
         self._hart_free[bank] = rep.hart_free
         for h in range(self.controller.harts):
             self._busy[bank][h] += rep.per_mvu_busy[h]
-        self.bank_batches[bank] += 1
-        self.bank_requests[bank] += batch
+        self._c_bank_batches.inc(bank=str(bank))
+        self._c_bank_requests.inc(batch, bank=str(bank))
+        if rep.hpm is not None:
+            self.hpm_files[bank].merge(rep.hpm)
+        if self.tracer is not None and self.tracer.enabled:
+            # cycle-domain occupancy rows: one span per hart this batch
+            # actually ran on (track "bankB/hartH" in the Perfetto export)
+            h_lo: Dict[int, int] = {}
+            h_hi: Dict[int, int] = {}
+            for s, e, j in zip(rep.per_job_start, rep.per_job_end,
+                               cs.jobs):
+                if j.mvu < 0 or e <= s:
+                    continue
+                h = j.mvu % self.controller.harts
+                h_lo[h] = min(h_lo.get(h, s), s)
+                h_hi[h] = max(h_hi.get(h, e), e)
+            for h in h_lo:
+                self.tracer.cycle_span(
+                    label or "batch", h_lo[h], h_hi[h],
+                    track=f"bank{bank}/hart{h}", batch=batch)
         return start, rep.makespan_cycles
 
     def admit(self, key: ModelKey, batch: int, *, program=None,
@@ -135,9 +178,10 @@ class SlotScheduler:
         cs = self.stream_for(key, program=program, stream=stream)
         if cs is None:
             with self._lock:
-                self.unscheduled += 1
-                self.admitted_requests += batch
+                self._c_unscheduled.inc()
+                self._c_requests.inc(batch)
             return None
+        label = str(key)
         with self._lock:
             if self.placement == "sharded" and self.n_banks > 1:
                 # data-parallel: every bank runs the stream on its shard.
@@ -153,7 +197,7 @@ class SlotScheduler:
                     if shard == 0:
                         continue
                     rep = self._simulate_on(b, cs, shard)
-                    s, f = self._commit(b, rep, cs, shard)
+                    s, f = self._commit(b, rep, cs, shard, label)
                     start = s if start is None else min(start, s)
                     finish = f if finish is None else max(finish, f)
                     booked.append(b)
@@ -165,10 +209,11 @@ class SlotScheduler:
                 rep, bank = min(reports,
                                 key=lambda rb: (rb[0].makespan_cycles,
                                                 rb[1]))
-                start, finish = self._commit(bank, rep, cs, batch)
+                start, finish = self._commit(bank, rep, cs, batch, label)
                 banks = (bank,)
-            self.admitted += 1
-            self.admitted_requests += batch
+            self._c_admitted.inc()
+            self._c_requests.inc(batch)
+            self._g_cycles.set(self.virtual_cycles)
             est = finish - start
             return Admission(
                 key=key, batch=batch, start_cycle=start,
@@ -179,9 +224,42 @@ class SlotScheduler:
                  wall_seconds: float) -> None:
         """Measured wall time feedback for one served batch."""
         with self._lock:
-            self.wall_seconds += wall_seconds
+            self._c_wall.inc(wall_seconds)
 
     # -------------------------------------------------------------- metrics
+    # legacy attribute surface, now registry-backed (same names/semantics
+    # as the former plain counters, read by tests and the service)
+    @property
+    def admitted(self) -> int:
+        return int(self._c_admitted.value())
+
+    @property
+    def admitted_requests(self) -> int:
+        return int(self._c_requests.value())
+
+    @property
+    def unscheduled(self) -> int:
+        return int(self._c_unscheduled.value())
+
+    @property
+    def wall_seconds(self) -> float:
+        return self._c_wall.value()
+
+    @property
+    def bank_batches(self) -> List[int]:
+        return [int(self._c_bank_batches.value(bank=str(b)))
+                for b in range(self.n_banks)]
+
+    @property
+    def bank_requests(self) -> List[int]:
+        return [int(self._c_bank_requests.value(bank=str(b)))
+                for b in range(self.n_banks)]
+
+    def hpm(self) -> List[Dict]:
+        """Per-bank HPM counter-file snapshots (committed streams only)."""
+        with self._lock:
+            return [f.snapshot() for f in self.hpm_files]
+
     @property
     def virtual_cycles(self) -> int:
         """The virtual clock: cycle at which the busiest slot frees."""
@@ -227,4 +305,5 @@ class SlotScheduler:
                     round(sum(busy) / (len(busy) * span), 4)
                     if busy and span else 0.0),
                 "wall_seconds": round(self.wall_seconds, 6),
+                "hpm": [f.snapshot() for f in self.hpm_files],
             }

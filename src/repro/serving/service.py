@@ -51,8 +51,12 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.compiler import executor
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracing import Tracer, now_ns
+from repro.runtime.fault_tolerance import WorkerFailure
 from repro.runtime.straggler import StragglerDetector
-from repro.serving.batcher import DynamicBatcher, MicroBatch, Request
+from repro.serving.batcher import DynamicBatcher, MicroBatch, QueueFull, \
+    Request
 from repro.serving.registry import ModelKey, ModelRegistry
 from repro.serving.scheduler import SlotScheduler
 
@@ -73,7 +77,11 @@ class InferenceService:
                  interpret: Optional[bool] = None,
                  n_banks: Optional[int] = None,
                  placement: str = "banked",
-                 mesh=None):
+                 mesh=None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None,
+                 trace_sample_every: int = 1,
+                 max_retries: int = 0):
         self.registry = registry
         self.n_banks = 1 if n_banks is None else n_banks
         if self.n_banks < 1:
@@ -106,13 +114,22 @@ class InferenceService:
                 self.n_banks = len(self._bank_devices)
         else:
             self.placement = "single"
+        # the spine-wide observability pair: one metrics registry + one
+        # tracer, propagated into every component the service constructs
+        # (caller-supplied components keep their own registries; exporters
+        # merge via registries())
+        self.metrics_registry = (metrics if metrics is not None
+                                 else MetricsRegistry())
+        self.tracer = tracer if tracer is not None else Tracer(
+            sample_every=trace_sample_every)
         self.batcher = batcher or DynamicBatcher(
             max_batch=max_batch, max_wait_s=max_wait_s, max_queue=max_queue,
-            round_to=round_to)
+            round_to=round_to, metrics=self.metrics_registry)
         self.scheduler = scheduler or SlotScheduler(
             n_banks=self.n_banks,
             placement=("sharded" if self.placement == "sharded"
-                       else "banked"))
+                       else "banked"),
+            metrics=self.metrics_registry, tracer=self.tracer)
         self.straggler = straggler or StragglerDetector(window=64)
         self.backend = backend
         self.interpret = interpret
@@ -128,8 +145,18 @@ class InferenceService:
         # finalize pool several completions may land concurrently)
         self._mlock = threading.Lock()
         self._latencies = collections.deque(maxlen=4096)
-        self.completed = 0
-        self.failed = 0
+        self.max_retries = max_retries
+        m = self.metrics_registry
+        self._c_completed = m.counter("service_completed_total",
+                                      "requests resolved successfully")
+        self._c_failed = m.counter("service_failed_total",
+                                   "requests resolved with an error")
+        self._c_requeues = m.counter(
+            "service_requeues_total",
+            "requests requeued after a transient bank failure")
+        self._h_latency = m.histogram(
+            "service_request_latency_seconds",
+            "submit-to-result wall latency")
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> "InferenceService":
@@ -187,7 +214,7 @@ class InferenceService:
             raise RuntimeError("service is not started — use "
                                "`with service:` or call start()")
         self.registry.entry(key)  # fail fast on unknown variants
-        req = Request(key, payload)
+        req = Request(key, payload, trace=self.tracer.start_trace())
         with self._pend_lock:
             self._pending += 1
         try:
@@ -273,30 +300,61 @@ class InferenceService:
 
     def _run_batch(self, mb: MicroBatch) -> None:
         t0 = time.perf_counter()
+        marks = {"batch": now_ns()}
         try:
-            pending, admission = self._dispatch(mb)
+            pending, admission = self._dispatch(mb, marks)
+        except WorkerFailure as e:
+            # transient bank loss on the serving path: requeue the batch's
+            # requests (bounded per request by max_retries) rather than
+            # failing them — a flaky bank costs latency, not errors
+            self._requeue_or_fail(mb, e)
+            return
         except BaseException as e:  # noqa: BLE001 — worker must survive
-            for r in mb.requests:
-                r.future.set_exception(e)
-            with self._mlock:
-                self.failed += len(mb.requests)
-            self._mark_done(len(mb.requests))
+            self._fail_batch(mb, e)
             return
         if self._pool is None:
-            self._finalize(mb, pending, admission, t0)
+            self._finalize(mb, pending, admission, t0, marks)
         else:
             # multi-bank: device work is in flight (jax dispatch is async);
             # materialization + future resolution move off the worker so
             # the next micro-batch can start on another bank immediately
-            self._pool.submit(self._finalize, mb, pending, admission, t0)
+            self._pool.submit(self._finalize, mb, pending, admission, t0,
+                              marks)
+
+    def _fail_batch(self, mb: MicroBatch, e: BaseException) -> None:
+        for r in mb.requests:
+            r.future.set_exception(e)
+        self._c_failed.inc(len(mb.requests))
+        self._mark_done(len(mb.requests))
+
+    def _requeue_or_fail(self, mb: MicroBatch, e: WorkerFailure) -> None:
+        for r in mb.requests:
+            if r.retries >= self.max_retries:
+                r.future.set_exception(e)
+                self._c_failed.inc()
+                self._mark_done(1)
+                continue
+            r.retries += 1
+            try:
+                # non-blocking: the worker must not deadlock against its
+                # own full queue; an unlucky request fails like any other
+                self.batcher.put(r, block=False)
+                self._c_requeues.inc()
+            except (QueueFull, RuntimeError) as qe:
+                r.future.set_exception(qe)
+                self._c_failed.inc()
+                self._mark_done(1)
 
     def _mark_done(self, n: int) -> None:
         with self._pend_lock:
             self._pending -= n
             self._pend_lock.notify_all()
 
-    def _dispatch(self, mb: MicroBatch):
-        """Book the batch and launch its device work (no host sync)."""
+    def _dispatch(self, mb: MicroBatch, marks: Dict):
+        """Book the batch and launch its device work (no host sync).
+
+        ``marks`` collects the phase boundary timestamps (ns) the finalize
+        step turns into queue/schedule/execute spans."""
         entry = self.registry.entry(mb.key)
         if entry.kind == "callable":
             if getattr(entry.fn, "books_own_cycles", False):
@@ -304,15 +362,19 @@ class InferenceService:
                 # decode step (token granularity) — a per-batch admission
                 # here would double-count their cycles
                 if getattr(entry.fn, "_scheduler", None) is not self.scheduler:
-                    entry.fn.bind_runtime(self.scheduler, mb.key)
+                    entry.fn.bind_runtime(self.scheduler, mb.key,
+                                          tracer=self.tracer)
+                marks["exec"] = now_ns()
                 results = entry.fn([r.payload for r in mb.requests])
                 if len(results) != mb.size:
                     raise RuntimeError(
                         f"engine {mb.key} returned {len(results)} results "
                         f"for {mb.size} requests")
                 return ("list", results), None
+            marks["sched"] = now_ns()
             admission = self.scheduler.admit(mb.key, mb.size,
                                              stream=entry.stream)
+            marks["exec"] = now_ns()
             results = entry.fn([r.payload for r in mb.requests])
             if len(results) != mb.size:
                 raise RuntimeError(
@@ -320,8 +382,10 @@ class InferenceService:
                     f"for {mb.size} requests")
             return ("list", results), admission
         runner = self._runner_for(mb.key)
+        marks["sched"] = now_ns()
         admission = self.scheduler.admit(mb.key, mb.size,
                                          program=runner.program)
+        marks["exec"] = now_ns()
         x = np.stack([np.asarray(r.payload) for r in mb.requests])
         bank = (admission.bank
                 if admission is not None and runner.placement == "banked"
@@ -329,18 +393,18 @@ class InferenceService:
         return ("array", runner(x, bank=bank)), admission
 
     def _finalize(self, mb: MicroBatch, pending, admission,
-                  t0: float) -> None:
+                  t0: float, marks: Dict) -> None:
         """Materialize the dispatched batch and resolve its futures."""
         try:
             kind, val = pending
             results = val if kind == "list" else list(np.asarray(val))
-        except BaseException as e:  # noqa: BLE001 — pool must survive
-            for r in mb.requests:
-                r.future.set_exception(e)
-            with self._mlock:
-                self.failed += len(mb.requests)
-            self._mark_done(len(mb.requests))
+        except WorkerFailure as e:
+            self._requeue_or_fail(mb, e)
             return
+        except BaseException as e:  # noqa: BLE001 — pool must survive
+            self._fail_batch(mb, e)
+            return
+        t_exec_done = now_ns()
         dt = time.perf_counter() - t0
         self.scheduler.complete(admission, dt)
         done = time.perf_counter()
@@ -348,12 +412,60 @@ class InferenceService:
             self._batch_seq += 1
             self.straggler.observe(self._batch_seq, dt)
             for r in mb.requests:
-                self._latencies.append(done - r.t_submit)
+                lat = done - r.t_submit
+                self._latencies.append(lat)
+                self._h_latency.observe(lat)
         for r, y in zip(mb.requests, results):
             r.future.set_result(y)
-        with self._mlock:
-            self.completed += len(mb.requests)
+        self._c_completed.inc(len(mb.requests))
+        self._emit_spans(mb, admission, marks, t_exec_done, now_ns())
         self._mark_done(len(mb.requests))
+
+    def _emit_spans(self, mb: MicroBatch, admission, marks: Dict,
+                    t_exec_done: int, t_fin_done: int) -> None:
+        """Turn one batch's phase boundaries into per-request spans.
+
+        Every request in the batch shares the batch's phase timestamps
+        (they rode the same dispatch); the queue span is per-request
+        (submit time differs). The tracer drops everything for unsampled
+        traces, so this is a handful of attribute checks when sampling."""
+        tr = self.tracer
+        if not tr.enabled:
+            return
+        worker = threading.current_thread().name
+        t_batch = marks["batch"]
+        t_sched = marks.get("sched")
+        t_exec = marks.get("exec", t_batch)
+        cyc0 = admission.start_cycle if admission is not None else None
+        cyc1 = admission.finish_cycle if admission is not None else None
+        # batch-constant span args, hoisted off the per-request loop
+        key_s = str(mb.key)
+        banks = list(admission.banks) if admission is not None else None
+        for r in mb.requests:
+            ctx = r.trace
+            if ctx is None or not ctx.sampled:
+                continue
+            tr.span(ctx, "queue", ctx.t_submit_ns, t_batch, track=worker,
+                    key=key_s, batch=mb.size)
+            if t_sched is not None:
+                tr.span(ctx, "schedule", t_sched, t_exec, track=worker,
+                        cycle_start=cyc0, cycle_end=cyc1, bank=banks)
+            tr.span(ctx, "execute", t_exec, t_exec_done, track=worker,
+                    cycle_start=cyc0, cycle_end=cyc1)
+            tr.span(ctx, "finalize", t_exec_done, t_fin_done, track=worker)
+
+    # legacy attribute surface, now registry-backed
+    @property
+    def completed(self) -> int:
+        return int(self._c_completed.value())
+
+    @property
+    def failed(self) -> int:
+        return int(self._c_failed.value())
+
+    @property
+    def requeues(self) -> int:
+        return int(self._c_requeues.value())
 
     # -------------------------------------------------------------- metrics
     def metrics(self) -> Dict:
@@ -379,6 +491,7 @@ class InferenceService:
         return {
             "completed": self.completed,
             "failed": self.failed,
+            "requeues": self.requeues,
             "queue_depth": self.batcher.depth,
             "peak_queue_depth": self.batcher.peak_depth,
             "batches": self.batcher.batches,
@@ -406,3 +519,26 @@ class InferenceService:
             "artifact_store": (self.registry.store.stats()
                                if self.registry.store is not None else None),
         }
+
+    def registries(self) -> List[MetricsRegistry]:
+        """Every metrics registry this service can see, deduped — the
+        exporter set for ``/metrics`` (components the caller constructed
+        separately keep their own registries)."""
+        regs = [self.metrics_registry]
+        for obj in (self.batcher, self.scheduler, self.registry,
+                    getattr(self.registry, "store", None)):
+            r = getattr(obj, "metrics_registry", None)
+            if r is not None and all(r is not x for x in regs):
+                regs.append(r)
+        for k in self.registry.keys():
+            fn = getattr(self.registry.entry(k), "fn", None)
+            r = getattr(fn, "metrics_registry", None)
+            if r is not None and all(r is not x for x in regs):
+                regs.append(r)
+        with self._mlock:
+            runners = list(self._runners.values())
+        for rn in runners:
+            r = getattr(rn, "metrics_registry", None)
+            if r is not None and all(r is not x for x in regs):
+                regs.append(r)
+        return regs
