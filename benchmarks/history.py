@@ -1,0 +1,142 @@
+"""Benchmark history: append each run's gated scalars to a JSONL log.
+
+Every ``benchmarks.run`` invocation overwrites its ``BENCH_*.json``
+artifacts — fine for "what is the number now", useless for "is the
+number drifting". This module flattens all current artifacts into one
+record (``{"<group>.<row>": us_per_call}``) stamped with the git sha,
+UTC timestamp, and a host fingerprint (timings from different hosts are
+not comparable — the regression checker partitions on it), and appends
+it to ``BENCH_history.jsonl``. CI restores the log from its cache, so
+the trajectory accumulates across runs; :mod:`benchmarks.regress` gates
+the latest record against a noise-aware rolling baseline.
+
+    PYTHONPATH=src python -m benchmarks.history          # append
+    PYTHONPATH=src python -m benchmarks.regress          # gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import datetime
+import glob
+import json
+import os
+import platform
+import subprocess
+from typing import Dict, List, Optional
+
+SCHEMA_VERSION = 1
+DEFAULT_HISTORY = "BENCH_history.jsonl"
+BENCH_GLOB = "BENCH_*.json"
+
+
+def git_sha(cwd: Optional[str] = None) -> Optional[str]:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=cwd, capture_output=True,
+            text=True, timeout=10)
+    except (OSError, subprocess.SubprocessError):
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
+
+
+def host_fingerprint() -> Dict:
+    """Coarse host identity: enough to partition incomparable timing
+    populations (different CPU / python), not to identify a machine."""
+    return {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "cpus": os.cpu_count(),
+    }
+
+
+def collect_metrics(paths: Optional[List[str]] = None,
+                    pattern: str = BENCH_GLOB) -> Dict[str, float]:
+    """Flatten every BENCH_*.json into ``{"<group>.<row>": us_per_call}``
+    (the gated scalars; ``derived`` strings are for humans)."""
+    if paths is None:
+        paths = sorted(glob.glob(pattern))
+    metrics: Dict[str, float] = {}
+    for path in paths:
+        stem = os.path.basename(path)
+        if stem.startswith("BENCH_"):
+            stem = stem[len("BENCH_"):]
+        stem = stem.rsplit(".json", 1)[0]
+        try:
+            rows = json.load(open(path))
+        except (OSError, ValueError):
+            continue          # unreadable artifact: skip, don't poison
+        if not isinstance(rows, dict):
+            continue
+        for name, r in rows.items():
+            try:
+                metrics[f"{stem}.{name}"] = float(r["us_per_call"])
+            except (KeyError, TypeError, ValueError):
+                continue
+    return metrics
+
+
+def make_record(paths: Optional[List[str]] = None, *,
+                pattern: str = BENCH_GLOB) -> Dict:
+    return {
+        "schema": SCHEMA_VERSION,
+        "ts": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "git_sha": git_sha(),
+        "host": host_fingerprint(),
+        "metrics": collect_metrics(paths, pattern),
+    }
+
+
+def append_record(record: Dict, path: str = DEFAULT_HISTORY) -> str:
+    with open(path, "a") as f:
+        f.write(json.dumps(record, sort_keys=True) + "\n")
+    return path
+
+
+def load_history(path: str = DEFAULT_HISTORY) -> List[Dict]:
+    """All records, oldest first; corrupt lines are skipped (a truncated
+    append from a killed run must not wedge the gate forever)."""
+    if not os.path.exists(path):
+        return []
+    out: List[Dict] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except ValueError:
+                continue
+            if isinstance(rec, dict) and isinstance(rec.get("metrics"),
+                                                    dict):
+                out.append(rec)
+    return out
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.history",
+        description="append the current BENCH_*.json scalars to the "
+                    "benchmark history log")
+    ap.add_argument("--history", default=DEFAULT_HISTORY)
+    ap.add_argument("--glob", default=BENCH_GLOB,
+                    help="artifact pattern to flatten")
+    args = ap.parse_args(argv)
+    rec = make_record(pattern=args.glob)
+    if not rec["metrics"]:
+        print(f"history: no {args.glob} artifacts found — nothing to "
+              "append (run `python -m benchmarks.run` first)")
+        return 1
+    append_record(rec, args.history)
+    n = len(load_history(args.history))
+    print(f"history: appended {len(rec['metrics'])} metrics "
+          f"(sha={str(rec['git_sha'])[:12]}) -> {args.history} "
+          f"({n} records)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,139 @@
+"""Noise-aware benchmark regression gate over ``BENCH_history.jsonl``.
+
+The latest record is compared metric-by-metric against a rolling
+baseline: the **median** of up to ``--baseline-n`` prior records (median
+because one noisy CI run must not move the bar). A metric regresses when
+it is worse than baseline by more than a relative threshold AND by more
+than an absolute noise floor (sub-noise rows flap on pure percentages).
+All ``us_per_call`` scalars are lower-is-better; per-metric threshold
+overrides live in :data:`THRESHOLDS`.
+
+Hosts differ: only prior records with the same host fingerprint as the
+latest participate in its baseline. Too-short history is reported but
+passes (the gate needs evidence before it can fail anyone).
+
+    PYTHONPATH=src python -m benchmarks.regress            # exit 1 on
+                                                           # regression
+"""
+
+from __future__ import annotations
+
+import argparse
+import statistics
+from typing import Dict, List, Optional
+
+try:
+    from benchmarks.history import DEFAULT_HISTORY, load_history
+except ImportError:
+    from history import DEFAULT_HISTORY, load_history
+
+DEFAULT_THRESHOLD = 0.5   # +50%: CPU CI timing noise is real
+BASELINE_N = 5            # rolling window of prior records
+MIN_HISTORY = 3           # records (incl. latest) before the gate arms
+EPS_US = 5.0              # absolute noise floor for us_per_call rows
+
+# per-metric relative-threshold overrides (keys as in history records:
+# "<group>.<row>"). Percentage/ratio-valued gate rows swing with host
+# load far more than steady-state timings do.
+THRESHOLDS: Dict[str, float] = {
+    "obs.bench_obs_tracing_overhead_pct": 2.0,
+    "obs.bench_obs_counter_inc_enabled_ns": 2.0,
+    "obs.bench_obs_counter_inc_disabled_ns": 2.0,
+    "calibration.bench_calibration_fit": 2.0,
+    "calibration.bench_calibration_residual": 2.0,
+}
+
+
+def _same_host(a: Dict, b: Dict) -> bool:
+    ha, hb = a.get("host") or {}, b.get("host") or {}
+    return (ha.get("platform"), ha.get("machine")) == \
+        (hb.get("platform"), hb.get("machine"))
+
+
+def detect(history: List[Dict], *, baseline_n: int = BASELINE_N,
+           threshold: float = DEFAULT_THRESHOLD,
+           min_history: int = MIN_HISTORY,
+           eps_us: float = EPS_US,
+           thresholds: Optional[Dict[str, float]] = None) -> Dict:
+    """Gate the newest record against the rolling baseline.
+
+    Returns ``{"status": "ok" | "regressions" | "insufficient",
+    "regressions": [...], "checked": N, "baseline_records": N}``.
+    """
+    thresholds = THRESHOLDS if thresholds is None else thresholds
+    if len(history) < min_history:
+        return {"status": "insufficient", "regressions": [],
+                "checked": 0, "baseline_records": max(0, len(history) - 1)}
+    latest = history[-1]
+    prior = [r for r in history[:-1] if _same_host(r, latest)]
+    prior = prior[-baseline_n:]
+    if len(prior) < max(2, min_history - 1):
+        return {"status": "insufficient", "regressions": [],
+                "checked": 0, "baseline_records": len(prior)}
+
+    regressions = []
+    checked = 0
+    for metric, value in sorted(latest.get("metrics", {}).items()):
+        base_vals = [r["metrics"][metric] for r in prior
+                     if metric in r.get("metrics", {})]
+        if len(base_vals) < 2:
+            continue                  # new metric: no baseline yet
+        baseline = statistics.median(base_vals)
+        checked += 1
+        th = thresholds.get(metric, threshold)
+        # lower-is-better scalars: regress on upward drift only
+        if value > baseline * (1.0 + th) and value - baseline > eps_us:
+            regressions.append({
+                "metric": metric,
+                "value": round(value, 3),
+                "baseline": round(baseline, 3),
+                "ratio": round(value / baseline, 3) if baseline else None,
+                "threshold": th,
+                "baseline_n": len(base_vals),
+            })
+    return {"status": "regressions" if regressions else "ok",
+            "regressions": regressions, "checked": checked,
+            "baseline_records": len(prior)}
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.regress",
+        description="gate the latest benchmark-history record against "
+                    "the rolling median baseline (exit 1 on regression)")
+    ap.add_argument("--history", default=DEFAULT_HISTORY)
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="default relative worsening tolerated")
+    ap.add_argument("--baseline-n", type=int, default=BASELINE_N)
+    ap.add_argument("--min-history", type=int, default=MIN_HISTORY)
+    ap.add_argument("--eps-us", type=float, default=EPS_US,
+                    help="absolute noise floor (us) a regression must "
+                         "also exceed")
+    args = ap.parse_args(argv)
+    history = load_history(args.history)
+    if not history:
+        print(f"regress: no history at {args.history} — run "
+              "`python -m benchmarks.history` after a bench run")
+        return 2
+    rep = detect(history, baseline_n=args.baseline_n,
+                 threshold=args.threshold, min_history=args.min_history,
+                 eps_us=args.eps_us)
+    if rep["status"] == "insufficient":
+        print(f"regress: insufficient history "
+              f"({len(history)} records, {rep['baseline_records']} "
+              f"comparable) — gate passes vacuously")
+        return 0
+    print(f"regress: checked {rep['checked']} metrics against the "
+          f"median of {rep['baseline_records']} prior records")
+    if rep["status"] == "ok":
+        print("regress: no regressions")
+        return 0
+    for r in rep["regressions"]:
+        print(f"REGRESSION {r['metric']}: {r['value']} vs baseline "
+              f"{r['baseline']} ({r['ratio']}x, threshold "
+              f"+{int(r['threshold'] * 100)}%)")
+    return 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

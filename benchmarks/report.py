@@ -1,98 +1,23 @@
-"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
-dryrun artifacts. Run after `python -m repro.launch.dryrun --all --mesh both`:
+"""Generate the EXPERIMENTS.md benchmark tables (§Serving, §Distributed,
+§LM-serving, §Observability, §Calibration, §History) from the
+``BENCH_*.json`` artifacts a ``benchmarks.run`` invocation leaves behind:
 
-  PYTHONPATH=src python -m benchmarks.report > artifacts/roofline_report.md
+  PYTHONPATH=src python -m benchmarks.run
+  PYTHONPATH=src python -m benchmarks.report > artifacts/bench_report.md
+
+Each table is silently skipped when its artifact is absent, so partial
+runs (``--only serving``) still report cleanly.
 """
 
 from __future__ import annotations
 
-import glob
 import json
 import os
 
 try:
-    from benchmarks.roofline import (ART_DIR, load_records, roofline_terms,
-                                     model_flops)
+    from benchmarks.history import DEFAULT_HISTORY, load_history
 except ImportError:
-    from roofline import ART_DIR, load_records, roofline_terms, model_flops
-
-
-def fmt_bytes(b):
-    for unit in ("B", "KB", "MB", "GB", "TB"):
-        if abs(b) < 1024:
-            return f"{b:.1f}{unit}"
-        b /= 1024
-    return f"{b:.1f}PB"
-
-
-def dryrun_table(recs):
-    print("\n### §Dry-run — lower+compile per (arch × shape × mesh)\n")
-    print("| arch | shape | mesh | devs | status | compile_s | HLO FLOPs/dev "
-          "| HBM proxy/dev | arg bytes/dev | collective bytes/dev | "
-          "dominant collective |")
-    print("|---|---|---|---|---|---|---|---|---|---|---|")
-    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
-        if not r.get("ok"):
-            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} |  | "
-                  f"**FAIL** {r.get('error','')[:60]} | | | | | | |")
-            continue
-        cb = r["collectives"]["bytes"]
-        dom = max(cb, key=cb.get) if any(cb.values()) else "-"
-        arg = r.get("mem", {}).get("argument_size_in_bytes", 0) or 0
-        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
-              f"{r['n_devices']} | OK | {r['compile_s']} | "
-              f"{r['flops']:.2e} | {fmt_bytes(r['bytes_hbm'])} | "
-              f"{fmt_bytes(arg)} | "
-              f"{fmt_bytes(r['collectives']['total_bytes'])} | {dom} |")
-
-
-def roofline_table(recs):
-    print("\n### §Roofline — three terms per cell (single-pod, 256 chips)\n")
-    print("| arch | shape | compute_s | memory_s | collective_s | dominant "
-          "| MODEL_FLOPS | useful ratio | roofline frac |")
-    print("|---|---|---|---|---|---|---|---|---|")
-    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
-        if not r.get("ok") or r["mesh"] != "single":
-            continue
-        t = roofline_terms(r)
-        print(f"| {t['arch']} | {t['shape']} | {t['t_compute_s']:.4f} | "
-              f"{t['t_memory_s']:.4f} | {t['t_collective_s']:.4f} | "
-              f"**{t['dominant']}** | {t['model_flops']:.2e} | "
-              f"{t['useful_ratio']:.2f} | {t['roofline_frac']:.3f} |")
-
-
-def delta_table(recs, base_dir):
-    """Baseline (pre-optimization snapshot) vs optimized, per cell."""
-    base = {(r["arch"], r["shape"], r["mesh"]): r
-            for r in load_records(base_dir) if r.get("ok")}
-    if not base:
-        return
-    print("\n### §Perf — baseline vs optimized, all cells (single-pod)\n")
-    print("NOTE: baseline artifacts were analyzed before the DUS-aware "
-          "accounting fix, so decode/prefill HBM deltas include ~2x of "
-          "accounting correction on top of the real optimizations "
-          "(itemized separately in EXPERIMENTS.md §Perf).\n")
-    print("| arch | shape | FLOPs/dev Δ | HBM proxy Δ | collective Δ |")
-    print("|---|---|---|---|---|")
-    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
-        if not r.get("ok") or r["mesh"] != "single":
-            continue
-        b = base.get((r["arch"], r["shape"], r["mesh"]))
-        if b is None:
-            continue
-
-        def ratio(k, sub=None):
-            x = b[k] if sub is None else b[k][sub]
-            y = r[k] if sub is None else r[k][sub]
-            if not x or not y:
-                return "-"
-            f = x / y
-            return f"{f:.2f}x" if f >= 1.005 else (
-                f"{1/f:.2f}x worse" if f < 0.995 else "=")
-
-        print(f"| {r['arch']} | {r['shape']} | {ratio('flops')} | "
-              f"{ratio('bytes_hbm')} | "
-              f"{ratio('collectives', 'total_bytes')} |")
+    from history import DEFAULT_HISTORY, load_history
 
 
 def serving_table(path="BENCH_serving.json"):
@@ -174,19 +99,57 @@ def obs_table(path="BENCH_obs.json"):
               "smoke; disabled-mode metric writes are one flag check.")
 
 
+def calibration_table(path="BENCH_calibration.json"):
+    """Aggregate the profiler/calibration artifact (emitted by
+    ``benchmarks.run --only calibration``) into the EXPERIMENTS.md
+    §Calibration table; silently skipped when the artifact is absent."""
+    if not os.path.exists(path):
+        return
+    rows = json.load(open(path))
+    print("\n### §Calibration — measured profiler vs the cycle cost "
+          "model\n")
+    print("| row | value (us unless noted) | derived |")
+    print("|---|---|---|")
+    for name in sorted(rows):
+        r = rows[name]
+        print(f"| {name} | {r['us_per_call']:.1f} | {r['derived']} |")
+    fitted = rows.get("bench_calibration_fit", {}).get("us_per_call")
+    if fitted is not None:
+        print(f"\nHeadline: **{fitted:.1f} ns/virtual-cycle** fitted on "
+              "this host; the scheduler's wall-time finish estimates use "
+              "this instead of the nominal 250 MHz clock once a "
+              "calibration is installed.")
+
+
+def history_table(path=DEFAULT_HISTORY, *, tail=5):
+    """Tail of the benchmark history log (``BENCH_history.jsonl``) so a
+    report shows the trajectory, not just the latest numbers."""
+    records = load_history(path)
+    if not records:
+        return
+    print(f"\n### §History — last {min(tail, len(records))} of "
+          f"{len(records)} benchmark-history records\n")
+    print("| ts (UTC) | git sha | metrics | host |")
+    print("|---|---|---|---|")
+    for rec in records[-tail:]:
+        host = rec.get("host") or {}
+        print(f"| {str(rec.get('ts', ''))[:19]} | "
+              f"{str(rec.get('git_sha') or '-')[:12]} | "
+              f"{len(rec.get('metrics', {}))} | "
+              f"{host.get('machine', '-')}/{host.get('cpus', '-')}cpu |")
+    print("\nGate: `python -m benchmarks.regress` compares the newest "
+          "record against the median of prior same-host records.")
+
+
 def main():
-    recs = load_records()
-    ok = [r for r in recs if r.get("ok")]
-    fail = [r for r in recs if not r.get("ok")]
-    print(f"<!-- generated by benchmarks/report.py: {len(ok)} OK, "
-          f"{len(fail)} FAIL -->")
-    dryrun_table(recs)
-    roofline_table(recs)
-    delta_table(recs, os.path.join(ART_DIR, "..", "dryrun_baseline"))
+    print("<!-- generated by benchmarks/report.py from BENCH_*.json "
+          "artifacts -->")
     serving_table()
     distributed_table()
     lm_table()
     obs_table()
+    calibration_table()
+    history_table()
 
 
 if __name__ == "__main__":

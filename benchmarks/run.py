@@ -1,5 +1,5 @@
 """Benchmark harness — one function per paper table + kernel micro-bench +
-roofline summary. Prints ``name,us_per_call,derived`` CSV rows and writes a
+calibration gates. Prints ``name,us_per_call,derived`` CSV rows and writes a
 machine-readable ``BENCH_kernels.json`` (name → us_per_call + derived) so
 the perf trajectory is tracked PR-over-PR. Conv-kernel + ResNet9
 end-to-end rows are additionally dumped to ``BENCH_conv.json``; the graph-
@@ -13,11 +13,17 @@ warm boot of a 2-model x 2-precision registry) to ``BENCH_coldstart.json``;
 the continuous-batching LM rows (static chunked vs token-granular decode
 on a heterogeneous stream) to ``BENCH_lm.json``; the observability
 overhead rows (serving smoke with tracing off vs on, metric write cost
-enabled vs disabled) to ``BENCH_obs.json``.
+enabled vs disabled) to ``BENCH_obs.json``; the measured-profiler /
+cost-model calibration rows (fitted ns-per-virtual-cycle, max relative
+residual, measured tile re-rank never-slower gate, profiler off-path
+zero-overhead gate) to ``BENCH_calibration.json``. After a run,
+``python -m benchmarks.history`` appends the gated scalars to
+``BENCH_history.jsonl`` and ``python -m benchmarks.regress`` gates the
+newest record against the rolling baseline.
 
 Run: PYTHONPATH=src python -m benchmarks.run
      [--only kernels,tables,conv,compile,serving,distributed,coldstart,
-      lm,obs]
+      lm,obs,calibration]
      [--json BENCH_kernels.json] [--conv-json BENCH_conv.json]
      [--compile-json BENCH_compile.json]
      [--serving-json BENCH_serving.json]
@@ -39,7 +45,7 @@ _ROWS: dict = {}
 # own BENCH_*.json next to the all-rows dump)
 _GROUP_KEYS: dict = {"conv": [], "compile": [], "serving": [],
                      "distributed": [], "coldstart": [], "lm": [],
-                     "obs": []}
+                     "obs": [], "calibration": []}
 
 
 def _emit(name: str, us: float, derived: str = "",
@@ -955,28 +961,112 @@ def bench_distributed():
           group="distributed")
 
 
-def roofline_summary():
-    """Summary of the dry-run roofline table (details in EXPERIMENTS.md)."""
-    try:
-        from benchmarks.roofline import table
-    except ImportError:
-        from roofline import table  # run as a script
-    rows = table()
-    if not rows:
-        _emit("roofline_cells", 0, "no dryrun artifacts found")
-        return
-    n_dom = {}
-    for r in rows:
-        n_dom[r["dominant"]] = n_dom.get(r["dominant"], 0) + 1
-    worst = min(rows, key=lambda r: r["roofline_frac"])
-    best = max(rows, key=lambda r: r["roofline_frac"])
-    _emit("roofline_cells", 0, f"{len(rows)} cells; dominant terms {n_dom}")
-    _emit("roofline_worst", 0,
-          f"{worst['arch']}/{worst['shape']}/{worst['mesh']}"
-          f" frac={worst['roofline_frac']:.3f}")
-    _emit("roofline_best", 0,
-          f"{best['arch']}/{best['shape']}/{best['mesh']}"
-          f" frac={best['roofline_frac']:.3f}")
+def bench_calibration():
+    """Measured profiler + cost-model calibration gates (EXPERIMENTS.md
+    §Calibration):
+
+    - per-step profile of a small compiled W2A2 CNN, then the fitted
+      ns-per-virtual-cycle and max |relative residual| of the cost model
+      (both trajectory-tracked scalars);
+    - measured tile re-rank: the measured winner is never slower than
+      the analytic choice (``never_slower=True`` gated in ``derived``);
+    - profiler off-path: plain serving runs emit zero measured spans —
+      the profiler is opt-in (``measured_spans=0`` gated in ``derived``).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.compiler import compile_graph
+    from repro.core import bitops
+    from repro.core.bitserial import SerialSpec, plan_spec
+    from repro.kernels import tuning
+    from repro.kernels.bitserial_matmul import bitserial_matmul_v2_pallas
+    from repro.models.layers import QuantPolicy
+    from repro.obs import Tracer, chrome_trace, fit, profile_program
+
+    # --- profile a compiled Program and fit the calibration ------------
+    # three serial layers (two convs + gemm) so the per-kind fit has
+    # multiple conv samples and the residual row is non-trivial
+    from repro.compiler import Graph, Node
+    rng = np.random.RandomState(11)
+    g = Graph(
+        "calib_cnn", {"x": (None, 8, 8, 8)}, ["y"],
+        [Node("c1", "conv2d", ["x", "c1.w"], "c1.y",
+              {"stride": 1, "padding": 1}),
+         Node("c1.relu", "relu", ["c1.y"], "c1.r"),
+         Node("c2", "conv2d", ["c1.r", "c2.w"], "c2.y",
+              {"stride": 1, "padding": 1}),
+         Node("c2.relu", "relu", ["c2.y"], "c2.r"),
+         Node("gap", "global_avg_pool", ["c2.r"], "pooled"),
+         Node("fc", "gemm", ["pooled", "fc.w"], "y")],
+        {"c1.w": (rng.randn(3, 3, 8, 16) * 0.2).astype(np.float32),
+         "c2.w": (rng.randn(3, 3, 16, 16) * 0.2).astype(np.float32),
+         "fc.w": (rng.randn(16, 10) * 0.2).astype(np.float32)})
+    x = jnp.asarray(rng.rand(4, 8, 8, 8), jnp.float32)
+    prog = compile_graph(g, x, policy=QuantPolicy(
+        mode="serial", w_bits=2, a_bits=2, radix_bits=7), backend="xla")
+    t0 = time.perf_counter()
+    prof = profile_program(prog, batch=4, warmup=1, repeats=2)
+    prof_us = (time.perf_counter() - t0) * 1e6
+    cal = fit(prof)
+    _emit("bench_calibration_profile", prof_us,
+          f"{len(prof.steps)} steps profiled "
+          f"({len(prof.serial_steps)} serial), warmup=1 best-of-2",
+          group="calibration")
+    _emit("bench_calibration_fit", cal.ns_for(),
+          f"fitted ns/virtual-cycle (pooled, {cal.n_samples} samples; "
+          "ns in us_per_call)", group="calibration")
+    _emit("bench_calibration_residual", cal.max_abs_residual,
+          f"max |rel residual|; outliers={list(cal.outliers)}",
+          group="calibration")
+
+    # --- measured tile re-rank: never slower than the analytic pick ----
+    m, k, n = 64, 256, 128
+    spec = SerialSpec(8, 4, True, True, 7)
+    v2 = plan_spec(spec)
+    rng = np.random.RandomState(3)
+    wp = bitops.pack_bitplanes(bitops.pad_to(bitops.to_bitplanes(
+        jnp.asarray(rng.randint(-8, 8, (k, n)).astype(np.int32)), 4),
+        32, axis=1), axis=1)
+    xp = bitops.pack_bitplanes(bitops.pad_to(bitops.to_bitplanes(
+        jnp.asarray(rng.randint(-128, 128, (m, k)).astype(np.int32)), 8),
+        32, axis=-1), axis=-1)
+    scale = np.ones(n, np.float32)
+    times: dict = {}
+
+    def measure(cfg):
+        key = tuple(sorted(cfg.kernel_kwargs().items()))
+        if key not in times:
+            fn = jax.jit(lambda xx, ww: bitserial_matmul_v2_pallas(
+                xx, ww, scale, None, spec=v2, k=k, interpret=True,
+                **cfg.kernel_kwargs()))
+            jax.block_until_ready(fn(xp, wp))      # compile + warmup
+            times[key] = _time_us(
+                lambda: jax.block_until_ready(fn(xp, wp)), n=2) * 1e-6
+        return times[key]
+
+    tuning.clear_cache()
+    analytic = tuning.choose_tile(m, k, n, spec)
+    chosen = tuning.choose_tile_measured(m, k, n, spec, measure=measure,
+                                         top_k=3)
+    t_an, t_ch = measure(analytic), measure(chosen)
+    _emit("bench_calibration_rerank", t_ch * 1e6,
+          f"measured ({chosen.block_m},{chosen.block_n},{chosen.block_k})"
+          f" vs analytic ({analytic.block_m},{analytic.block_n},"
+          f"{analytic.block_k}) {t_an * 1e6:.0f}us over "
+          f"{len(times)} timed tiles; never_slower={t_ch <= t_an}",
+          group="calibration")
+
+    # --- off-path: the profiler must cost nothing when not invoked -----
+    tr = Tracer()
+    jax.block_until_ready(prog(x))
+    jax.block_until_ready(prog(x))
+    trace = chrome_trace(tr)
+    n_measured = sum(1 for ev in trace["traceEvents"]
+                     if ev.get("pid") == "measured")
+    _emit("bench_calibration_off_path", 0,
+          f"measured_spans={n_measured} "
+          f"buffered={tr.stats()['buffered']} (profiler is opt-in)",
+          group="calibration")
 
 
 GROUPS = {
@@ -991,7 +1081,7 @@ GROUPS = {
     "coldstart": [bench_coldstart],
     "lm": [bench_lm],
     "obs": [bench_obs],
-    "roofline": [roofline_summary],
+    "calibration": [bench_calibration],
 }
 
 
@@ -1024,6 +1114,9 @@ def main(argv=None) -> None:
     ap.add_argument("--obs-json", default="BENCH_obs.json",
                     help="path for the observability overhead rows dump "
                          "('' disables)")
+    ap.add_argument("--calibration-json", default="BENCH_calibration.json",
+                    help="path for the profiler/calibration rows dump "
+                         "('' disables)")
     args = ap.parse_args(argv)
     groups = list(GROUPS) if not args.only else [
         g.strip() for g in args.only.split(",") if g.strip()]
@@ -1044,7 +1137,8 @@ def main(argv=None) -> None:
                    "distributed": args.distributed_json,
                    "coldstart": args.coldstart_json,
                    "lm": args.lm_json,
-                   "obs": args.obs_json}
+                   "obs": args.obs_json,
+                   "calibration": args.calibration_json}
     for grp, path in group_paths.items():
         keys = _GROUP_KEYS[grp]
         if not path or not keys:

@@ -25,7 +25,7 @@ from repro.core.quant import QuantSpec, quantize_int
 from repro.kernels.ops import (pack_activations, serial_conv2d_packed_op,
                                serial_matmul_packed_op)
 
-__all__ = ["make_runner", "bucket_sizes", "bucket_for",
+__all__ = ["make_runner", "make_step_runner", "bucket_sizes", "bucket_for",
            "BucketedRunner", "make_bucketed_runner"]
 
 
@@ -150,6 +150,34 @@ def make_runner(program, *, backend: Optional[str] = None,
                                     backend, interpret)
         return env[output_name]
 
+    return run
+
+
+def make_step_runner(program, step, *, backend: Optional[str] = None,
+                     interpret: Optional[bool] = None) -> Callable:
+    """Build ``run(params, *inputs) -> output`` for a single Program step.
+
+    The whole-Program runner fuses every step into one XLA computation,
+    which is what serving wants but hides per-step cost. The profiler
+    (:mod:`repro.obs.profiler`) needs the opposite: one jit-able callable
+    per IR node so each can be fenced with ``block_until_ready`` and timed
+    in isolation. Multi-input steps (``add``) take their inputs
+    positionally in ``step.inputs`` order.
+    """
+    backend = backend or program.backend
+    interpret = program.interpret if interpret is None else interpret
+    fn = _APPLY.get(step.kind)
+    if fn is None:
+        raise KeyError(f"no executor for step kind {step.kind!r}")
+
+    if step.kind == "add":
+        def run(params, *inputs):
+            return fn(step, params.get(step.name, {}), *inputs,
+                      backend, interpret)
+    else:
+        def run(params, *inputs):
+            return fn(step, params.get(step.name, {}), inputs[0],
+                      backend, interpret)
     return run
 
 

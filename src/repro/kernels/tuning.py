@@ -35,7 +35,8 @@ from repro.core.cost_model import (TPUConfig, conv_kernel_cost,
                                    conv_kernel_vmem_bytes, kernel_cost,
                                    kernel_vmem_bytes)
 
-__all__ = ["TileConfig", "choose_tile", "ConvTileConfig", "choose_conv_tile",
+__all__ = ["TileConfig", "choose_tile", "choose_tile_measured",
+           "ConvTileConfig", "choose_conv_tile", "choose_conv_tile_measured",
            "clear_cache", "cache_info", "set_cache_limit",
            "set_persistent_store"]
 
@@ -163,6 +164,34 @@ def _candidates(dim: int, options: Tuple[int, ...], mult: int):
     return out or [options[0]]
 
 
+def _enumerate_tiles(m, k, n, spec, *, out_bits, tpu):
+    """All VMEM-feasible matmul tile configs, best-first (modeled cost
+    ascending, larger block volume breaking ties)."""
+    nd_a = bitops.num_digits(spec.a_bits, spec.radix_bits, spec.a_signed)
+    nd_w = bitops.num_digits(spec.w_bits, spec.radix_bits, spec.w_signed)
+    budget = int(tpu.vmem_bytes * tpu.vmem_budget_frac)
+
+    cands = []
+    for bm in _candidates(m, _BM_CANDIDATES, 8):
+        for bn in _candidates(n, _BN_CANDIDATES, 32):
+            for bk in _candidates(k, _BK_CANDIDATES, 32):
+                for cw, ca in ((True, True), (True, False),
+                               (False, True), (False, False)):
+                    kw = dict(a_bits=spec.a_bits, w_bits=spec.w_bits,
+                              nd_a=nd_a, nd_w=nd_w, bm=bm, bn=bn, bk=bk,
+                              cache_weights=cw, cache_acts=ca,
+                              out_bits=out_bits)
+                    vmem = kernel_vmem_bytes(m, k, n, **kw)
+                    if vmem > budget:
+                        continue
+                    cost = kernel_cost(m, k, n, **kw, tpu=tpu)
+                    cands.append(TileConfig(bm, bn, bk, cw, ca, cost,
+                                            vmem))
+    cands.sort(key=lambda c: (c.cost, -(c.block_m * c.block_n
+                                        * c.block_k)))
+    return cands
+
+
 def choose_tile(m: int, k: int, n: int, spec: SerialSpec, *,
                 out_bits: Optional[int] = None,
                 tpu: TPUConfig = TPUConfig()) -> TileConfig:
@@ -182,35 +211,55 @@ def choose_tile(m: int, k: int, n: int, spec: SerialSpec, *,
         _cache_put(key, persisted)
         return persisted
 
-    nd_a = bitops.num_digits(spec.a_bits, spec.radix_bits, spec.a_signed)
-    nd_w = bitops.num_digits(spec.w_bits, spec.radix_bits, spec.w_signed)
-    budget = int(tpu.vmem_bytes * tpu.vmem_budget_frac)
-
-    best: Optional[TileConfig] = None
-    for bm in _candidates(m, _BM_CANDIDATES, 8):
-        for bn in _candidates(n, _BN_CANDIDATES, 32):
-            for bk in _candidates(k, _BK_CANDIDATES, 32):
-                for cw, ca in ((True, True), (True, False),
-                               (False, True), (False, False)):
-                    kw = dict(a_bits=spec.a_bits, w_bits=spec.w_bits,
-                              nd_a=nd_a, nd_w=nd_w, bm=bm, bn=bn, bk=bk,
-                              cache_weights=cw, cache_acts=ca,
-                              out_bits=out_bits)
-                    vmem = kernel_vmem_bytes(m, k, n, **kw)
-                    if vmem > budget:
-                        continue
-                    cost = kernel_cost(m, k, n, **kw, tpu=tpu)
-                    cand = TileConfig(bm, bn, bk, cw, ca, cost, vmem)
-                    if best is None or cost < best.cost or (
-                            cost == best.cost
-                            and bm * bn * bk > (best.block_m * best.block_n
-                                                * best.block_k)):
-                        best = cand
-    if best is None:  # degenerate: nothing fit the budget — smallest tile
+    cands = _enumerate_tiles(m, k, n, spec, out_bits=out_bits, tpu=tpu)
+    if cands:
+        best = cands[0]
+    else:  # degenerate: nothing fit the budget — smallest tile
         best = TileConfig(_BM_CANDIDATES[0], _BN_CANDIDATES[0],
                           _BK_CANDIDATES[0], False, False, float("inf"),
                           0)
     _persist_record(key, "tile", best)
+    _cache_put(key, best)
+    return best
+
+
+def choose_tile_measured(m: int, k: int, n: int, spec: SerialSpec, *,
+                         measure, out_bits: Optional[int] = None,
+                         top_k: int = 4,
+                         tpu: TPUConfig = TPUConfig()) -> TileConfig:
+    """Measured re-rank: shortlist the ``top_k`` analytically cheapest
+    matmul tiles, time each with the caller-supplied ``measure(cfg) ->
+    seconds``, and pick the measured winner.
+
+    The analytic best always heads the shortlist and strict-``<``
+    comparison keeps it on ties, so the result is never slower than
+    :func:`choose_tile`'s choice under ``measure`` — gated by the
+    calibration benchmark. ``measure`` stays caller-supplied so this
+    module remains jax-free (the bench times the actual Pallas kernel).
+    Winners persist/memoize like analytic decisions (kind
+    ``tile_measured``); warm boots replay them without re-measuring.
+    """
+    key = ("measured", m, k, n, spec, out_bits, top_k, tpu)
+    hit = _cache_get(key)
+    if hit is not None:
+        return hit
+    persisted = _persist_lookup(key, TileConfig)
+    if persisted is not None:
+        _cache_put(key, persisted)
+        return persisted
+
+    cands = _enumerate_tiles(m, k, n, spec, out_bits=out_bits,
+                             tpu=tpu)[:max(1, top_k)]
+    if not cands:
+        cands = [TileConfig(_BM_CANDIDATES[0], _BN_CANDIDATES[0],
+                            _BK_CANDIDATES[0], False, False,
+                            float("inf"), 0)]
+    best, best_t = None, None
+    for c in cands:                    # analytic order; ties keep rank 1
+        t = float(measure(c))
+        if best is None or t < best_t:
+            best, best_t = c, t
+    _persist_record(key, "tile_measured", best)
     _cache_put(key, best)
     return best
 
@@ -235,6 +284,37 @@ class ConvTileConfig:
 
 _BCO_CANDIDATES = (32, 64, 128, 256, 512)    # %32: packed-output word axis
 _BNB_CANDIDATES = (1, 2, 4, 8)               # images per grid step
+
+
+def _enumerate_conv_tiles(n, h, w, ci, co, *, fh, fw, stride, padding,
+                          spec, out_bits, fix_bco, fix_bnb, tpu):
+    """All VMEM-feasible conv tile configs, best-first (modeled cost
+    ascending, larger Co-block × image group breaking ties)."""
+    nd_a = bitops.num_digits(spec.a_bits, spec.radix_bits, spec.a_signed)
+    nd_w = bitops.num_digits(spec.w_bits, spec.radix_bits, spec.w_signed)
+    budget = int(tpu.vmem_bytes * tpu.vmem_budget_frac)
+
+    bco_opts = ([fix_bco] if fix_bco is not None
+                else _candidates(co, _BCO_CANDIDATES, 32))
+    bnb_opts = ([fix_bnb] if fix_bnb is not None
+                else [b for b in _BNB_CANDIDATES if b <= max(1, n)])
+    cands = []
+    for bco in bco_opts:
+        for bnb in bnb_opts:
+            for cw, ca in ((True, True), (True, False),
+                           (False, True), (False, False)):
+                kw = dict(fh=fh, fw=fw, stride=stride, padding=padding,
+                          a_bits=spec.a_bits, w_bits=spec.w_bits,
+                          nd_a=nd_a, nd_w=nd_w, bnb=bnb, bco=bco,
+                          cache_weights=cw, cache_acts=ca,
+                          out_bits=out_bits)
+                vmem = conv_kernel_vmem_bytes(n, h, w, ci, co, **kw)
+                if vmem > budget:
+                    continue
+                cost = conv_kernel_cost(n, h, w, ci, co, **kw, tpu=tpu)
+                cands.append(ConvTileConfig(bco, bnb, cw, ca, cost, vmem))
+    cands.sort(key=lambda c: (c.cost, -(c.block_co * c.block_nb)))
+    return cands
 
 
 def choose_conv_tile(n: int, h: int, w: int, ci: int, co: int, *,
@@ -263,37 +343,57 @@ def choose_conv_tile(n: int, h: int, w: int, ci: int, co: int, *,
         _cache_put(key, persisted)
         return persisted
 
-    nd_a = bitops.num_digits(spec.a_bits, spec.radix_bits, spec.a_signed)
-    nd_w = bitops.num_digits(spec.w_bits, spec.radix_bits, spec.w_signed)
-    budget = int(tpu.vmem_bytes * tpu.vmem_budget_frac)
-
-    bco_opts = ([fix_bco] if fix_bco is not None
-                else _candidates(co, _BCO_CANDIDATES, 32))
-    bnb_opts = ([fix_bnb] if fix_bnb is not None
-                else [b for b in _BNB_CANDIDATES if b <= max(1, n)])
-    best: Optional[ConvTileConfig] = None
-    for bco in bco_opts:
-        for bnb in bnb_opts:
-            for cw, ca in ((True, True), (True, False),
-                           (False, True), (False, False)):
-                kw = dict(fh=fh, fw=fw, stride=stride, padding=padding,
-                          a_bits=spec.a_bits, w_bits=spec.w_bits,
-                          nd_a=nd_a, nd_w=nd_w, bnb=bnb, bco=bco,
-                          cache_weights=cw, cache_acts=ca,
-                          out_bits=out_bits)
-                vmem = conv_kernel_vmem_bytes(n, h, w, ci, co, **kw)
-                if vmem > budget:
-                    continue
-                cost = conv_kernel_cost(n, h, w, ci, co, **kw, tpu=tpu)
-                cand = ConvTileConfig(bco, bnb, cw, ca, cost, vmem)
-                if best is None or cost < best.cost or (
-                        cost == best.cost
-                        and bco * bnb > best.block_co * best.block_nb):
-                    best = cand
-    if best is None:  # degenerate: nothing fit the budget — smallest tile
+    cands = _enumerate_conv_tiles(n, h, w, ci, co, fh=fh, fw=fw,
+                                  stride=stride, padding=padding,
+                                  spec=spec, out_bits=out_bits,
+                                  fix_bco=fix_bco, fix_bnb=fix_bnb,
+                                  tpu=tpu)
+    if cands:
+        best = cands[0]
+    else:  # degenerate: nothing fit the budget — smallest tile
         best = ConvTileConfig(fix_bco or _BCO_CANDIDATES[0], fix_bnb or 1,
                               False, False, float("inf"), 0)
     _persist_record(key, "conv_tile", best)
+    _cache_put(key, best)
+    return best
+
+
+def choose_conv_tile_measured(n: int, h: int, w: int, ci: int, co: int, *,
+                              fh: int, fw: int, stride: int, padding: int,
+                              spec: SerialSpec, measure,
+                              out_bits: Optional[int] = None,
+                              top_k: int = 4,
+                              tpu: TPUConfig = TPUConfig()
+                              ) -> ConvTileConfig:
+    """Measured re-rank for conv tiles — same contract as
+    :func:`choose_tile_measured` (analytic top-``top_k`` shortlist, timed
+    by the caller's ``measure(cfg) -> seconds``, never slower than the
+    analytic choice under ``measure``, persisted as
+    ``conv_tile_measured``)."""
+    key = ("conv_measured", n, h, w, ci, co, fh, fw, stride, padding,
+           spec, out_bits, top_k, tpu)
+    hit = _cache_get(key)
+    if hit is not None:
+        return hit
+    persisted = _persist_lookup(key, ConvTileConfig)
+    if persisted is not None:
+        _cache_put(key, persisted)
+        return persisted
+
+    cands = _enumerate_conv_tiles(n, h, w, ci, co, fh=fh, fw=fw,
+                                  stride=stride, padding=padding,
+                                  spec=spec, out_bits=out_bits,
+                                  fix_bco=None, fix_bnb=None,
+                                  tpu=tpu)[:max(1, top_k)]
+    if not cands:
+        cands = [ConvTileConfig(_BCO_CANDIDATES[0], 1, False, False,
+                                float("inf"), 0)]
+    best, best_t = None, None
+    for c in cands:                    # analytic order; ties keep rank 1
+        t = float(measure(c))
+        if best is None or t < best_t:
+            best, best_t = c, t
+    _persist_record(key, "conv_tile_measured", best)
     _cache_put(key, best)
     return best
 

@@ -489,6 +489,92 @@ def _main_compile(argv) -> None:
           f"dedup_ratio={st['dedup_ratio']}")
 
 
+def _main_profile(argv) -> None:
+    """Measured-time profile of a compiled model: per-layer wall-ns next
+    to the cost model's predicted virtual cycles, a fitted ns/cycle per
+    op kind, and the misprediction-outlier list (DESIGN.md §10)."""
+    from repro.models.layers import QuantPolicy
+    from repro.models.resnet import (ResNet9Config, resnet9_graph,
+                                     resnet9_init)
+    from repro.obs import (Tracer, fit, format_calibration, format_profile,
+                           profile_program, write_chrome_trace)
+    from repro.obs import calibrate as _calibrate
+    from repro.serving import ModelRegistry
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.serve profile",
+        description="profile a compiled model step-by-step and calibrate "
+                    "the cycle cost model against measured wall time")
+    ap.add_argument("--model", default="resnet9",
+                    help="graph-compiled model (resnet9)")
+    ap.add_argument("--precision", default=None,
+                    help="comma-separated variants, e.g. w2a2,w8a8 "
+                         "(default: the model's own policy)")
+    ap.add_argument("--backend", default="xla",
+                    choices=["xla", "pallas_v2"])
+    ap.add_argument("--interpret", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed runs per step (best-of-k)")
+    ap.add_argument("--mode", default="pipelined",
+                    choices=["pipelined", "distributed"],
+                    help="command-stream mapping for predicted cycles")
+    ap.add_argument("--tolerance", type=float, default=1.0,
+                    help="|relative residual| beyond which a layer is "
+                         "reported as a cost-model outlier")
+    ap.add_argument("--store", default=None,
+                    help="artifact store: warm-boot the compile and "
+                         "persist the fitted Calibration record")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the measured spans as the third "
+                         "('measured') track of a Chrome trace JSON")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--calib-batch", type=int, default=8)
+    args = ap.parse_args(argv)
+    if args.model not in ("resnet9", "cnn"):
+        raise SystemExit(f"profile: unknown model {args.model!r} — only "
+                         "graph-compiled CNNs (resnet9) profile per-step")
+    mcfg = ResNet9Config()
+    params = resnet9_init(jax.random.PRNGKey(args.seed), mcfg)
+    graph = resnet9_graph(params, mcfg)
+    in_shape = next(iter(graph.inputs.values()))
+    calib = jax.random.uniform(
+        jax.random.PRNGKey(args.seed + 1),
+        (args.calib_batch,) + tuple(int(d) for d in in_shape[1:]))
+    registry = ModelRegistry(backend=args.backend,
+                             interpret=args.interpret, store=args.store)
+    precisions = _parse_precisions(args.precision, mcfg)
+    for w_bits, a_bits in precisions:
+        policy = QuantPolicy(mode="serial", w_bits=w_bits, a_bits=a_bits,
+                             radix_bits=mcfg.radix_bits)
+        key = registry.register_graph(graph.name or "cnn", graph, calib,
+                                      policy)
+        program = registry.program(key)
+        prof = profile_program(program, batch=args.batch,
+                               warmup=args.warmup, repeats=args.repeats,
+                               mode=args.mode)
+        cal = fit(prof, tolerance=args.tolerance)
+        print(f"== {key} (backend={args.backend}"
+              f"{', interpret' if args.interpret else ''}) ==")
+        print(format_profile(prof, cal))
+        print(format_calibration(cal))
+        if registry.store is not None:
+            name = f"{graph.name or 'cnn'}@W{w_bits}A{a_bits}"
+            k = _calibrate.save(registry.store, cal, name)
+            print(f"calibration persisted: {k}")
+        if args.trace_out:
+            out = args.trace_out
+            if len(precisions) > 1:   # one trace file per variant
+                stem, dot, ext = out.rpartition(".")
+                out = (f"{stem}.W{w_bits}A{a_bits}.{ext}" if dot
+                       else f"{out}.W{w_bits}A{a_bits}")
+            path = write_chrome_trace(Tracer(), out,
+                                      extra_spans=prof.spans())
+            print(f"measured trace ({len(prof.steps)} step spans on the "
+                  f"'measured' track) -> {path}")
+        print()
+
+
 def _main_trace(argv) -> None:
     """Summarize a saved Chrome trace: top-k slowest requests by phase."""
     import json
@@ -524,6 +610,9 @@ def main():
         return
     if len(sys.argv) > 1 and sys.argv[1] == "trace":
         _main_trace(sys.argv[2:])
+        return
+    if len(sys.argv) > 1 and sys.argv[1] == "profile":
+        _main_profile(sys.argv[2:])
         return
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)

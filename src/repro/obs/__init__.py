@@ -11,7 +11,11 @@ Three layers (DESIGN.md §9):
 * :mod:`repro.obs.tracing` + :mod:`repro.obs.export` — request-scoped
   spans in two clock domains (wall ns / virtual MVU cycles), bounded +
   sampled, exported as Perfetto-loadable Chrome trace JSON and Prometheus
-  text.
+  text;
+* :mod:`repro.obs.profiler` + :mod:`repro.obs.calibrate` — the measured
+  layer (DESIGN.md §10): opt-in per-step wall-ns profiling of compiled
+  Programs (a third, "measured" trace track) and robust ns-per-cycle
+  calibration of the virtual cost model, persisted like tuning records.
 """
 
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
@@ -21,6 +25,10 @@ from .tracing import Span, TraceContext, Tracer
 from .export import (chrome_trace, write_chrome_trace, prometheus_text,
                      trace_summary, format_trace_summary,
                      start_metrics_server)
+from .profiler import (ProgramProfile, StepProfile, profile_program,
+                       format_profile)
+from .calibrate import (Calibration, fit, fit_samples, format_calibration,
+                        calibration_key)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "DEFAULT_BUCKETS",
@@ -28,4 +36,7 @@ __all__ = [
     "Span", "TraceContext", "Tracer",
     "chrome_trace", "write_chrome_trace", "prometheus_text",
     "trace_summary", "format_trace_summary", "start_metrics_server",
+    "ProgramProfile", "StepProfile", "profile_program", "format_profile",
+    "Calibration", "fit", "fit_samples", "format_calibration",
+    "calibration_key",
 ]

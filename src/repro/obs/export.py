@@ -2,15 +2,18 @@
 a saved-trace summarizer.
 
 Chrome trace format (Perfetto loads it directly): a flat list of complete
-("ph":"X") events with microsecond ``ts``/``dur``. We map the two clock
-domains onto two *processes*:
+("ph":"X") events with microsecond ``ts``/``dur``. We map the three clock
+domains onto three *processes*:
 
 * pid ``"wall"`` — one thread row per serving worker/phase; ``ts`` is
   ``t0_ns/1000`` rebased to the earliest span so traces start near 0;
 * pid ``"virtual-cycles"`` — one thread row per bank/hart track; ``ts``
   is the virtual cycle count, abusing the µs unit as "cycles" (Perfetto
   renders the numbers; the unit label is wrong by design and documented
-  in DESIGN.md §9).
+  in DESIGN.md §9);
+* pid ``"measured"`` — profiler-measured per-step spans (args carry
+  ``domain="measured"``), laid end-to-end on their own synthetic
+  timeline (DESIGN.md §10) — passed in via ``extra_spans``.
 
 Prometheus exposition is the text format v0.0.4 subset: HELP/TYPE plus
 ``name{labels} value`` lines, histograms expanded to cumulative
@@ -35,10 +38,25 @@ __all__ = ["chrome_trace", "write_chrome_trace", "prometheus_text",
 
 def chrome_trace(tracer: Tracer, *, extra_spans: Iterable[Span] = ()
                  ) -> Dict:
-    spans = list(tracer.spans()) + list(extra_spans)
     events: List[Dict] = []
+    measured, spans = [], []
+    for s in list(tracer.spans()) + list(extra_spans):
+        if (s.args or {}).get("domain") == "measured":
+            measured.append(s)
+        else:
+            spans.append(s)
     wall = [s for s in spans if s.t1_ns > s.t0_ns or s.cycle_start is None]
     base_ns = min((s.t0_ns for s in wall), default=0)
+    for s in measured:
+        # third clock domain: profiler-measured step times on their own
+        # synthetic end-to-end timeline (starts at 0 by construction)
+        events.append({
+            "name": s.name, "ph": "X", "pid": "measured",
+            "tid": s.track or "steps",
+            "ts": s.t0_ns / 1000.0,
+            "dur": (s.t1_ns - s.t0_ns) / 1000.0,
+            "args": dict(s.args),
+        })
     for s in spans:
         args = dict(s.args)
         if s.trace_id:
@@ -69,7 +87,10 @@ def chrome_trace(tracer: Tracer, *, extra_spans: Iterable[Span] = ()
             "displayTimeUnit": "ms",
             "otherData": {"domains": {"wall": "perf_counter ns/1000",
                                       "virtual-cycles":
-                                          "MVU cycles (ts unit = cycles)"},
+                                          "MVU cycles (ts unit = cycles)",
+                                      "measured":
+                                          "profiler wall ns/1000 "
+                                          "(synthetic step timeline)"},
                           "tracer": tracer.stats()}}
 
 

@@ -195,6 +195,9 @@ class ContinuousLMEngine:
                                        "active slots summed over steps")
         self._c_busy = m.counter("lm_busy_seconds_total",
                                  "wall seconds inside serve()")
+        self._c_step_wall = m.counter(
+            "lm_step_wall_seconds_total",
+            "measured wall seconds summed over arena decode steps")
         self._g_queue_peak = m.gauge("lm_queue_peak",
                                      "engine-queue high-water mark")
 
@@ -291,9 +294,14 @@ class ContinuousLMEngine:
     def _reset_serving_metrics(self):
         for c in (self._c_tokens, self._c_completed, self._c_inserts,
                   self._c_steps, self._c_slot_steps, self._c_busy,
-                  self._g_queue_peak):
+                  self._c_step_wall, self._g_queue_peak):
             c.clear()
         self._latencies = collections.deque(maxlen=4096)
+        # (booked est_cycles, measured wall ns) per decode step — the LM
+        # path's calibration samples (see obs/calibrate.fit_samples);
+        # unfenced like the straggler observations, so the hot loop stays
+        # free of block_until_ready
+        self._step_samples = collections.deque(maxlen=2048)
 
     # legacy attribute surface, now registry-backed
     @property
@@ -323,6 +331,22 @@ class ContinuousLMEngine:
     @property
     def busy_seconds(self) -> float:
         return self._c_busy.value()
+
+    @property
+    def step_wall_seconds(self) -> float:
+        return self._c_step_wall.value()
+
+    def wall_samples(self) -> List[tuple]:
+        """(booked est_cycles, measured wall ns) per decode step since the
+        last warmup/reset — calibration's LM-path input::
+
+            cal = calibrate.fit_samples(
+                [("decode_step", "lm_decode", c, w)
+                 for c, w in engine.wall_samples()])
+
+        Samples only accumulate with a scheduler bound (no admission →
+        no cycle booking to calibrate against)."""
+        return list(self._step_samples)
 
     # ------------------------------------------------------------- runtime
     def bind_runtime(self, scheduler, key, *, tracer=None) -> None:
@@ -430,8 +454,12 @@ class ContinuousLMEngine:
                 self._step_seq += 1
                 # per-step anomaly detection + (if bound) one span per
                 # arena step: wall ns here, booked cycles from admission
-                self.step_straggler.observe(self._step_seq,
-                                            time.perf_counter() - st0)
+                step_dt = time.perf_counter() - st0
+                self.step_straggler.observe(self._step_seq, step_dt)
+                self._c_step_wall.inc(step_dt)
+                if adm is not None:
+                    self._step_samples.append(
+                        (adm.est_cycles, step_dt * 1e9))
                 if self._tracer is not None and self._tracer.enabled:
                     self._tracer.span(
                         self._trace_ctx, "decode_step", st0_ns, now_ns(),
@@ -492,6 +520,12 @@ class ContinuousLMEngine:
                 "recompiles_after_warmup": after,
                 "straggler": self.step_straggler.snapshot()}
 
+    def _observed_ns_per_cycle(self):
+        cyc = sum(c for c, _ in self._step_samples)
+        if cyc <= 0:
+            return None
+        return round(sum(w for _, w in self._step_samples) / cyc, 4)
+
     def engine_metrics(self) -> dict:
         lat = sorted(self._latencies)
 
@@ -512,6 +546,8 @@ class ContinuousLMEngine:
                              if self.busy_seconds else 0.0),
             "decode_steps": self.decode_steps,
             "prefill_inserts": self.prefill_inserts,
+            "step_wall_seconds": round(self.step_wall_seconds, 6),
+            "observed_ns_per_cycle": self._observed_ns_per_cycle(),
             "slot_occupancy": round(occ, 4),
             "queue_peak": self.queue_peak,
             "latency_p50_ms": pct(50),

@@ -16,7 +16,11 @@ that decision in the cycle domain:
   aggregate cost;
 * the returned :class:`Admission` carries the virtual start/finish cycles
   and estimated seconds; :meth:`complete` feeds back measured wall time so
-  metrics expose both the modelled and the observed picture.
+  metrics expose both the modelled and the observed picture;
+* :meth:`set_calibration` attaches a fitted ns-per-cycle model
+  (:mod:`repro.obs.calibrate`) so ``est_seconds`` and the predicted
+  finish switch from the nominal controller clock to measured wall time —
+  the SLO-booking currency.
 
 **Bank scaling** (``n_banks > 1``): the slot pool generalizes from the
 single fabric's 8 slots to ``n_banks x 8`` — one 8-MVU bank per jax
@@ -104,6 +108,10 @@ class SlotScheduler:
             "batches served without a cost model")
         self._c_wall = m.counter(
             "scheduler_wall_seconds_total", "measured batch wall time")
+        self._c_done_cycles = m.counter(
+            "scheduler_completed_cycles_total",
+            "booked est_cycles of completed batches (observed ns/cycle "
+            "denominator)")
         self._c_bank_batches = m.counter(
             "scheduler_bank_batches_total", "batches committed per bank")
         self._c_bank_requests = m.counter(
@@ -115,6 +123,22 @@ class SlotScheduler:
         self.hpm_files = [HPMCounterFile(h, metrics=m, bank=b)
                           for b in range(n_banks)]
         self.tracer = tracer
+        # optional fitted wall-time model (see set_calibration)
+        self._calibration = None
+
+    # ---------------------------------------------------------- calibration
+    def set_calibration(self, calibration) -> None:
+        """Attach a fitted ns-per-cycle model (anything with the
+        :class:`repro.obs.calibrate.Calibration` ``predict_wall_seconds``
+        contract), or ``None`` to revert to the nominal controller clock.
+        Later admissions book wall-time estimates at the fitted rate."""
+        with self._lock:
+            self._calibration = calibration
+
+    def _est_seconds(self, est_cycles: int) -> float:
+        if self._calibration is not None:
+            return self._calibration.predict_wall_seconds(est_cycles)
+        return est_cycles / self.controller.freq_hz
 
     # --------------------------------------------------------------- stream
     def stream_for(self, key: ModelKey, program=None, stream=None):
@@ -218,13 +242,17 @@ class SlotScheduler:
             return Admission(
                 key=key, batch=batch, start_cycle=start,
                 finish_cycle=finish, est_cycles=est,
-                est_seconds=est / self.controller.freq_hz, banks=banks)
+                est_seconds=self._est_seconds(est), banks=banks)
 
     def complete(self, admission: Optional[Admission],
                  wall_seconds: float) -> None:
-        """Measured wall time feedback for one served batch."""
+        """Measured wall time feedback for one served batch. With the
+        admission handed back, its booked cycles accumulate too, so
+        metrics expose the *observed* ns/cycle next to any fitted one."""
         with self._lock:
             self._c_wall.inc(wall_seconds)
+            if admission is not None:
+                self._c_done_cycles.inc(admission.est_cycles)
 
     # -------------------------------------------------------------- metrics
     # legacy attribute surface, now registry-backed (same names/semantics
@@ -306,4 +334,25 @@ class SlotScheduler:
                     if busy and span else 0.0),
                 "wall_seconds": round(self.wall_seconds, 6),
                 "hpm": [f.snapshot() for f in self.hpm_files],
+                "calibration": self._calibration_metrics(span),
             }
+
+    def _calibration_metrics(self, span: int) -> Dict:
+        """The wall-time view of the virtual clock: fitted ns/cycle (when
+        calibrated), the observed rate from completions, and the busiest
+        slot's predicted wall-clock finish."""
+        cal = self._calibration
+        done_cycles = self._c_done_cycles.value()
+        observed = (self._c_wall.value() * 1e9 / done_cycles
+                    if done_cycles > 0 else None)
+        fitted = cal.ns_for() if cal is not None else None
+        return {
+            "source": "fitted" if cal is not None else "nominal",
+            "ns_per_cycle": (round(fitted, 4) if fitted is not None
+                             else round(1e9 / self.controller.freq_hz, 4)),
+            "observed_ns_per_cycle": (round(observed, 4)
+                                      if observed is not None else None),
+            "predicted_finish_seconds": round(
+                cal.predict_wall_seconds(span) if cal is not None
+                else span / self.controller.freq_hz, 6),
+        }

@@ -287,6 +287,13 @@ class InferenceService:
         report["bucket_compiles"] = self.warmup()
         return report
 
+    def set_calibration(self, calibration) -> None:
+        """Attach a fitted ns-per-cycle model (``repro.obs.calibrate``)
+        to the scheduler, turning cycle-domain admissions into wall-time
+        finish estimates; surfaced via
+        ``metrics()["scheduler"]["calibration"]``."""
+        self.scheduler.set_calibration(calibration)
+
     def _max_batch_for(self, key: ModelKey) -> Optional[int]:
         return self.registry.entry(key).max_batch
 

@@ -1,0 +1,186 @@
+"""Benchmark history + regression-gate tests (pure stdlib — no jax):
+artifact flattening, record schema, JSONL append/load resilience, and
+the noise-aware detector — including the acceptance-criteria case that
+a synthetically injected regression exits nonzero."""
+
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+
+import history  # noqa: E402
+import regress  # noqa: E402
+
+
+def write_bench(tmp_path, name, rows):
+    path = tmp_path / f"BENCH_{name}.json"
+    path.write_text(json.dumps(rows))
+    return str(path)
+
+
+def record(metrics, *, host=None, sha="abc123"):
+    return {"schema": 1, "ts": "2026-08-09T00:00:00+00:00",
+            "git_sha": sha,
+            "host": host or {"platform": "linux-x", "machine": "x86_64",
+                             "python": "3.11.0", "cpus": 8},
+            "metrics": dict(metrics)}
+
+
+def flat_history(n, value=100.0, metric="obs.row"):
+    return [record({metric: value}) for _ in range(n)]
+
+
+# ---------------------------------------------------------------- history
+
+def test_collect_metrics_flattens_artifacts(tmp_path):
+    write_bench(tmp_path, "serving", {
+        "bench_serving_bucketed": {"us_per_call": 120.5, "derived": "d"},
+        "bench_serving_speedup": {"us_per_call": 0.0, "derived": "2x"}})
+    write_bench(tmp_path, "obs", {
+        "bench_obs_tracing_enabled": {"us_per_call": 300.0,
+                                      "derived": ""}})
+    m = history.collect_metrics(pattern=str(tmp_path / "BENCH_*.json"))
+    assert m == {"serving.bench_serving_bucketed": 120.5,
+                 "serving.bench_serving_speedup": 0.0,
+                 "obs.bench_obs_tracing_enabled": 300.0}
+
+
+def test_collect_metrics_skips_unreadable(tmp_path):
+    (tmp_path / "BENCH_bad.json").write_text("{not json")
+    write_bench(tmp_path, "list", ["not", "a", "dict"])
+    write_bench(tmp_path, "ok", {"row": {"us_per_call": 1.0,
+                                         "derived": ""}})
+    m = history.collect_metrics(pattern=str(tmp_path / "BENCH_*.json"))
+    assert m == {"ok.row": 1.0}
+
+
+def test_make_record_fields(tmp_path):
+    write_bench(tmp_path, "g", {"r": {"us_per_call": 2.0, "derived": ""}})
+    rec = history.make_record(pattern=str(tmp_path / "BENCH_*.json"))
+    assert rec["schema"] == history.SCHEMA_VERSION
+    assert rec["metrics"] == {"g.r": 2.0}
+    assert rec["ts"].endswith("+00:00")             # UTC stamped
+    assert set(rec["host"]) == {"platform", "machine", "python", "cpus"}
+    # inside this git repo the sha resolves; outside it degrades to None
+    assert rec["git_sha"] is None or len(rec["git_sha"]) == 40
+
+
+def test_append_and_load_roundtrip(tmp_path):
+    path = str(tmp_path / "h.jsonl")
+    history.append_record(record({"a.b": 1.0}), path)
+    history.append_record(record({"a.b": 2.0}), path)
+    out = history.load_history(path)
+    assert [r["metrics"]["a.b"] for r in out] == [1.0, 2.0]
+    assert history.load_history(str(tmp_path / "missing.jsonl")) == []
+
+
+def test_load_history_skips_corrupt_lines(tmp_path):
+    path = tmp_path / "h.jsonl"
+    lines = [json.dumps(record({"a": 1.0})), "{truncated", "",
+             json.dumps(["not", "a", "record"]),
+             json.dumps({"metrics": "not-a-dict"}),
+             json.dumps(record({"a": 2.0}))]
+    path.write_text("\n".join(lines) + "\n")
+    out = history.load_history(str(path))
+    assert [r["metrics"]["a"] for r in out] == [1.0, 2.0]
+
+
+def test_history_main_appends_or_reports_empty(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    hist = str(tmp_path / "BENCH_history.jsonl")
+    assert history.main(["--history", hist]) == 1    # no artifacts yet
+    write_bench(tmp_path, "g", {"r": {"us_per_call": 5.0, "derived": ""}})
+    assert history.main(["--history", hist]) == 0
+    assert len(history.load_history(hist)) == 1
+
+
+# ----------------------------------------------------------------- regress
+
+def test_detect_ok_on_flat_history():
+    rep = regress.detect(flat_history(5))
+    assert rep["status"] == "ok"
+    assert rep["checked"] == 1 and rep["regressions"] == []
+
+
+def test_detect_flags_injected_regression(tmp_path):
+    hist = flat_history(5)
+    hist.append(record({"obs.row": 1000.0}))        # 10x the baseline
+    rep = regress.detect(hist)
+    assert rep["status"] == "regressions"
+    (r,) = rep["regressions"]
+    assert r["metric"] == "obs.row" and r["baseline"] == 100.0
+    assert r["ratio"] == 10.0
+    # the CLI exits nonzero on it — the CI gate contract
+    path = str(tmp_path / "h.jsonl")
+    for rec in hist:
+        history.append_record(rec, path)
+    assert regress.main(["--history", path]) == 1
+    # and zero once the offending record is followed by recovered runs
+    for rec in flat_history(5):
+        history.append_record(rec, path)
+    assert regress.main(["--history", path]) == 0
+
+
+def test_detect_threshold_tolerates_noise():
+    hist = flat_history(5)
+    hist.append(record({"obs.row": 140.0}))         # +40% < default +50%
+    assert regress.detect(hist)["status"] == "ok"
+    hist[-1] = record({"obs.row": 160.0})           # +60% > threshold
+    assert regress.detect(hist)["status"] == "regressions"
+    # per-metric overrides win over the default threshold
+    assert regress.detect(hist, thresholds={"obs.row": 2.0})[
+        "status"] == "ok"
+
+
+def test_detect_absolute_noise_floor():
+    # +200% but only +2us: sub-floor, must not flap
+    hist = [record({"obs.pct": 1.0}) for _ in range(5)]
+    hist.append(record({"obs.pct": 3.0}))
+    assert regress.detect(hist)["status"] == "ok"
+    assert regress.detect(hist, eps_us=0.5)["status"] == "regressions"
+
+
+def test_detect_insufficient_history(tmp_path):
+    assert regress.detect(flat_history(2))["status"] == "insufficient"
+    path = str(tmp_path / "h.jsonl")
+    for rec in flat_history(2):
+        history.append_record(rec, path)
+    assert regress.main(["--history", path]) == 0   # passes vacuously
+    assert regress.main(["--history",
+                         str(tmp_path / "nope.jsonl")]) == 2
+
+
+def test_detect_partitions_on_host():
+    other = {"platform": "darwin-y", "machine": "arm64",
+             "python": "3.12.0", "cpus": 10}
+    # prior records all came from a different host: no comparable baseline
+    hist = [record({"obs.row": 10.0}, host=other) for _ in range(5)]
+    hist.append(record({"obs.row": 1000.0}))
+    assert regress.detect(hist)["status"] == "insufficient"
+    # with same-host priors present, foreign records don't dilute them
+    hist = flat_history(4) + \
+        [record({"obs.row": 1.0}, host=other) for _ in range(4)]
+    hist.append(record({"obs.row": 1000.0}))
+    rep = regress.detect(hist)
+    assert rep["status"] == "regressions"
+    assert rep["regressions"][0]["baseline"] == 100.0
+
+
+def test_detect_new_metric_has_no_baseline():
+    hist = flat_history(4)
+    hist.append(record({"obs.row": 100.0, "new.metric": 9999.0}))
+    rep = regress.detect(hist)
+    assert rep["status"] == "ok" and rep["checked"] == 1
+
+
+def test_detect_baseline_is_median_not_mean():
+    vals = [100.0, 100.0, 100.0, 100.0, 10000.0]    # one noisy CI run
+    hist = [record({"obs.row": v}) for v in vals]
+    hist.append(record({"obs.row": 200.0}))
+    rep = regress.detect(hist)        # mean baseline would mask this
+    assert rep["status"] == "regressions"
+    assert rep["regressions"][0]["baseline"] == 100.0
