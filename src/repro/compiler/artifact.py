@@ -656,6 +656,19 @@ def load_program(ref_or_name: str, store: ArtifactStore):
             "the stored per-MVU job list no longer matches what codegen "
             "derives from this Program — the artifact was produced by a "
             "different compiler build; recompile to refresh the store")
+    # semantic verification, always on (a deserialized Program crossed a
+    # trust boundary): integrity hashing catches bit rot, the verifier
+    # catches a manifest that was tampered with *and* re-digested — a
+    # hash-consistent lie about step wiring, formats, or tile choices
+    from repro import analysis
+    from repro.analysis.verify_ir import VerifyError, verify_program
+    analysis.count("artifact_load")
+    try:
+        verify_program(program, site="artifact_load")
+    except VerifyError as e:
+        raise ArtifactError(
+            f"artifact {ref[:12]}… rejected by the program verifier "
+            f"({e.check}): {e}") from e
     store._note_load((time.perf_counter() - t0) * 1e3)
     return program
 

@@ -144,8 +144,16 @@ class Program:
     def to_command_stream(self, mode: str = "pipelined",
                           **kw) -> codegen.CommandStream:
         """Lower to the controller command stream (cycle estimates, runtime
-        scheduling) — any compiled model gets the paper's §3.3 artifact."""
-        return codegen.generate(self, mode=mode, **kw)
+        scheduling) — any compiled model gets the paper's §3.3 artifact.
+        With ``REPRO_VERIFY`` set, the emitted stream is hazard-checked
+        and cycle-reconciled before it is handed out."""
+        cs = codegen.generate(self, mode=mode, **kw)
+        from repro import analysis
+        if analysis.verify_enabled():
+            analysis.count("to_command_stream")
+            from repro.analysis.verify_stream import verify_stream
+            verify_stream(cs)
+        return cs
 
 
 # --------------------------------------------------------------------------
@@ -384,6 +392,10 @@ def compile_graph(g: Graph, calib, *,
                   # per-example input shape: the serving runtime's bucketed
                   # runner warms its padding buckets from this
                   "input_shape": tuple(int(d) for d in calib.shape[1:]),
+                  # the batch geometry the tile autotuners optimized for —
+                  # the verifier re-derives each tile's VMEM working set
+                  # with the same batch (analysis/verify_ir.py)
+                  "calib_batch": int(calib.shape[0]),
                   # the quant policy that drove annotation — part of the
                   # on-disk artifact (compiler/artifact.py), so a loaded
                   # Program still knows what precision it embodies
@@ -397,8 +409,10 @@ def compile_graph(g: Graph, calib, *,
         if f[0] == "float":
             return tensor
         if f[0] == "codes":
-            name = f"{ctx}.dequant"
             out = f"{tensor}::f32"
+            if out in fmt:   # a second float consumer shares the dequant
+                return out
+            name = f"{ctx}.dequant"
             params[name] = {"alpha": _alpha_for(f[1])}
             steps.append(Step(name, "dequant", (tensor,), out))
             fmt[out] = ("float",)
@@ -598,8 +612,14 @@ def compile_graph(g: Graph, calib, *,
     if f[0] != "float":  # graph output must be host-readable
         out_name = as_float(out_name, "output")
     meta["formats"] = dict(fmt)
-    return Program(
+    program = Program(
         graph_name=g.name, steps=tuple(steps), params=params,
         input_name=input_name, output_name=out_name, backend=backend,
         interpret=interpret, cost_nodes=cost_nodes,
         per_layer_bits=per_layer_bits, meta=meta)
+    from repro import analysis
+    if analysis.verify_enabled():
+        analysis.count("post_lowering")
+        from repro.analysis.verify_ir import verify_program
+        verify_program(program, site="post_lowering")
+    return program

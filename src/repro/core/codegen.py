@@ -65,6 +65,13 @@ class CommandStream:
                 f"A{j.a_bits}/W{j.w_bits} tiles={j.tile_ops} cyc={j.cycles}")
         return "\n".join(lines)
 
+    def verify(self, **kw):
+        """Hazard/resource check this stream (see
+        :func:`repro.analysis.verify_stream.verify_stream`); returns the
+        reconciliation :class:`~repro.runtime.controller.SimReport`."""
+        from repro.analysis.verify_stream import verify_stream
+        return verify_stream(self, **kw)
+
 
 def _layer_job(layer, mvu: int, a_bits: int, w_bits: int,
                job_id: int, deps: Tuple[int, ...]) -> MVUJob:

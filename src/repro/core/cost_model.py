@@ -29,8 +29,8 @@ from repro.core.mvu import LANES, MVU_COUNT
 __all__ = ["HWConfig", "ConvLayer", "LinearLayer", "layer_cycles",
            "pipelined_fps", "distributed_fps", "network_cycles",
            "RESNET9_CIFAR10", "CNV_CIFAR10", "resnet50_layers",
-           "TPUConfig", "kernel_vmem_bytes", "kernel_cost",
-           "conv_kernel_vmem_bytes", "conv_kernel_cost"]
+           "TPUConfig", "vmem_budget_bytes", "kernel_vmem_bytes",
+           "kernel_cost", "conv_kernel_vmem_bytes", "conv_kernel_cost"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,6 +162,16 @@ class TPUConfig:
     hbm_bw: float = 8.0e11                # bytes/s
     int8_macs: float = 2.6e14             # MXU int8 MAC/s
     vpu_ops: float = 4.0e12               # VPU elementwise ops/s
+
+
+def vmem_budget_bytes(tpu: "TPUConfig" = None) -> int:
+    """The VMEM ceiling a tuned tile must fit under — the single
+    definition shared by the tile enumerators (:mod:`repro.kernels.tuning`)
+    and the program verifier (:mod:`repro.analysis.verify_ir`), so the
+    budget the tuner enumerated with is exactly the one verification
+    re-checks against."""
+    tpu = tpu or TPUConfig()
+    return int(tpu.vmem_bytes * tpu.vmem_budget_frac)
 
 
 def _grid_shape(m, k, n, bm, bn, bk):

@@ -185,10 +185,16 @@ def bitserial_conv2d_v2_pallas(
     bit-identical to ``quantize_pack_ref`` of the float epilogue output.
     """
     ba, n, h, w_in, ciw = x_packed.shape
-    assert ba == spec.a_bits, (ba, spec.a_bits)
+    if ba != spec.a_bits:
+        raise ValueError(f"x_packed carries {ba} bit-planes, spec wants "
+                         f"a_bits={spec.a_bits}")
     bw, fh, fw, ciw_w, co = w_packed.shape
-    assert bw == spec.w_bits, (bw, spec.w_bits)
-    assert ciw == ciw_w == -(-ci // 32), (ciw, ciw_w, ci)
+    if bw != spec.w_bits:
+        raise ValueError(f"w_packed carries {bw} bit-planes, spec wants "
+                         f"w_bits={spec.w_bits}")
+    if not (ciw == ciw_w == -(-ci // 32)):
+        raise ValueError(f"channel-word mismatch: x {ciw}, w {ciw_w}, "
+                         f"ceil(ci/32)={-(-ci // 32)}")
     if requant is not None and requant_scale is None:
         raise ValueError("requant requires requant_scale")
     if emit_packed:

@@ -192,14 +192,19 @@ def bitserial_matmul_pallas(
     must already fold the requant step size.
     """
     m, kx = x.shape
-    assert kx == k, (kx, k)
+    if kx != k:
+        raise ValueError(f"x has K={kx}, caller declared k={k}")
     bw, kwords, n = w_packed.shape
-    assert bw == spec.w_bits
+    if bw != spec.w_bits:
+        raise ValueError(f"w_packed carries {bw} bit-planes, spec wants "
+                         f"w_bits={spec.w_bits}")
     # pad to block multiples (the code generator pads tiles the same way)
     mp = -(-m // block_m) * block_m
     np_ = -(-n // block_n) * block_n
     kp = -(-k // block_k) * block_k
-    assert block_k % 32 == 0
+    if block_k % 32 != 0:
+        raise ValueError(f"block_k={block_k} must be a multiple of the "
+                         "32-bit packing word")
     x = jnp.pad(x.astype(jnp.int8 if spec.a_bits <= 8 else jnp.int32),
                 ((0, mp - m), (0, kp - k)))
     w_packed = jnp.pad(w_packed, ((0, 0), (0, kp // 32 - kwords), (0, np_ - n)))
@@ -419,11 +424,19 @@ def bitserial_matmul_v2_pallas(
     requant)``.
     """
     ba, m, kwords = x_packed.shape
-    assert ba == spec.a_bits, (ba, spec.a_bits)
+    if ba != spec.a_bits:
+        raise ValueError(f"x_packed carries {ba} bit-planes, spec wants "
+                         f"a_bits={spec.a_bits}")
     bw, kwords_w, n = w_packed.shape
-    assert bw == spec.w_bits, (bw, spec.w_bits)
-    assert kwords == kwords_w == -(-k // 32), (kwords, kwords_w, k)
-    assert block_k % 32 == 0
+    if bw != spec.w_bits:
+        raise ValueError(f"w_packed carries {bw} bit-planes, spec wants "
+                         f"w_bits={spec.w_bits}")
+    if not (kwords == kwords_w == -(-k // 32)):
+        raise ValueError(f"K-word mismatch: x {kwords}, w {kwords_w}, "
+                         f"ceil(k/32)={-(-k // 32)}")
+    if block_k % 32 != 0:
+        raise ValueError(f"block_k={block_k} must be a multiple of the "
+                         "32-bit packing word")
     if requant is not None and requant_scale is None:
         raise ValueError("requant requires requant_scale")
     if emit_packed:

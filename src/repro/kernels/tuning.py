@@ -29,7 +29,7 @@ import dataclasses
 import threading
 from typing import Optional, Tuple
 
-from repro.core import bitops
+from repro.core import bitops, cost_model
 from repro.core.bitserial import SerialSpec
 from repro.core.cost_model import (TPUConfig, conv_kernel_cost,
                                    conv_kernel_vmem_bytes, kernel_cost,
@@ -169,7 +169,7 @@ def _enumerate_tiles(m, k, n, spec, *, out_bits, tpu):
     ascending, larger block volume breaking ties)."""
     nd_a = bitops.num_digits(spec.a_bits, spec.radix_bits, spec.a_signed)
     nd_w = bitops.num_digits(spec.w_bits, spec.radix_bits, spec.w_signed)
-    budget = int(tpu.vmem_bytes * tpu.vmem_budget_frac)
+    budget = cost_model.vmem_budget_bytes(tpu)
 
     cands = []
     for bm in _candidates(m, _BM_CANDIDATES, 8):
@@ -292,7 +292,7 @@ def _enumerate_conv_tiles(n, h, w, ci, co, *, fh, fw, stride, padding,
     ascending, larger Co-block × image group breaking ties)."""
     nd_a = bitops.num_digits(spec.a_bits, spec.radix_bits, spec.a_signed)
     nd_w = bitops.num_digits(spec.w_bits, spec.radix_bits, spec.w_signed)
-    budget = int(tpu.vmem_bytes * tpu.vmem_budget_frac)
+    budget = cost_model.vmem_budget_bytes(tpu)
 
     bco_opts = ([fix_bco] if fix_bco is not None
                 else _candidates(co, _BCO_CANDIDATES, 32))

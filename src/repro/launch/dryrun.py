@@ -207,6 +207,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, radix: int = 7,
             t_compile = time.perf_counter() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # per-device list on older jax
+            cost = cost[0] if cost else None
         txt = compiled.as_text()
         # call-graph roll-up with while-loop trip counts (XLA's own
         # cost_analysis counts scan bodies once — see hlo_analysis.py)
@@ -278,7 +280,8 @@ def main():
                                    remat_policy=args.remat_policy)
                     ok &= rec["ok"]
     else:
-        assert args.arch and args.shape, "--arch/--shape or --all"
+        if not (args.arch and args.shape):
+            raise SystemExit("--arch/--shape required unless --all is given")
         rec = run_cell(args.arch, args.shape, meshes[0], radix=args.radix,
                        out_dir=args.out, force=args.force, tag=args.tag,
                        kv_bits=args.kv_bits,

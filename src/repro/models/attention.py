@@ -210,7 +210,9 @@ def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
             "len": jnp.zeros((), jnp.int32),
         }
     else:
-        assert kv_bits == 8
+        if kv_bits != 8:
+            raise ValueError(f"quantized KV cache supports kv_bits=8 only, "
+                             f"got {kv_bits}")
         cache = {
             "k_q": jnp.zeros((batch, size, n_kv, head_dim), jnp.int8),
             "v_q": jnp.zeros((batch, size, n_kv, head_dim), jnp.int8),

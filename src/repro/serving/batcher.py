@@ -91,10 +91,10 @@ class DynamicBatcher:
         self.max_wait_s = max_wait_s
         self.max_queue = max_queue
         self.round_to = round_to
-        self._queues: Dict[ModelKey, Deque[Request]] = {}
+        self._queues: Dict[ModelKey, Deque[Request]] = {}  # guarded-by: _cv
         self._cv = threading.Condition()
-        self._depth = 0
-        self._closed = False
+        self._depth = 0                                    # guarded-by: _cv
+        self._closed = False                               # guarded-by: _cv
         # registry-backed counters (every write happens under self._cv, so
         # the totals stay exact despite the registry's lock-free writes)
         self.metrics_registry = (metrics if metrics is not None

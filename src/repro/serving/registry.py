@@ -104,15 +104,15 @@ class ModelRegistry:
             # re-enumerate tile configs (kernels/tuning keeps its L1 LRU)
             from repro.kernels import tuning
             tuning.set_persistent_store(store)
-        self._entries: Dict[ModelKey, _Entry] = {}
+        self._entries: Dict[ModelKey, _Entry] = {}  # guarded-by: _lock
         # compiled graph-entry Programs only, LRU order (pinned Programs
         # live in their _Entry and never evict)
         self._lru: "collections.OrderedDict[ModelKey, object]" = \
-            collections.OrderedDict()
+            collections.OrderedDict()                   # guarded-by: _lock
         # weak values: a plane shared only by evicted Programs must not be
         # kept alive by the dedup cache itself
         self._pack_cache: "weakref.WeakValueDictionary[str, object]" = \
-            weakref.WeakValueDictionary()
+            weakref.WeakValueDictionary()               # guarded-by: _lock
         self._lock = threading.RLock()
         # registry-backed counters (every write happens under self._lock,
         # so totals stay exact); the legacy attribute names remain as
@@ -362,7 +362,7 @@ class ModelRegistry:
         return [k for k in self._entries if k.model == model]
 
     # ------------------------------------------------------- weight sharing
-    def _share_packed(self, program) -> None:
+    def _share_packed(self, program) -> None:  # requires: _lock
         """Content-addressed dedup of AOT-packed weight planes.
 
         Packed planes are a pure function of (float weights, w_bits,

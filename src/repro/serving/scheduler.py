@@ -90,9 +90,11 @@ class SlotScheduler:
         self.mode = mode
         self._lock = threading.Lock()
         h = self.controller.harts
-        self._hart_free: List[List[int]] = [[0] * h for _ in range(n_banks)]
-        self._busy: List[List[int]] = [[0] * h for _ in range(n_banks)]
-        self._streams: Dict[ModelKey, object] = {}
+        self._hart_free: List[List[int]] = [
+            [0] * h for _ in range(n_banks)]        # guarded-by: _lock
+        self._busy: List[List[int]] = [
+            [0] * h for _ in range(n_banks)]        # guarded-by: _lock
+        self._streams: Dict[ModelKey, object] = {}  # guarded-by: _lock
         # registry-backed counters: every mutation below happens under
         # self._lock, so the totals stay exact despite the registry's
         # lock-free write path (see obs/metrics.py)
@@ -124,7 +126,7 @@ class SlotScheduler:
                           for b in range(n_banks)]
         self.tracer = tracer
         # optional fitted wall-time model (see set_calibration)
-        self._calibration = None
+        self._calibration = None                    # guarded-by: _lock
 
     # ---------------------------------------------------------- calibration
     def set_calibration(self, calibration) -> None:
@@ -142,7 +144,14 @@ class SlotScheduler:
 
     # --------------------------------------------------------------- stream
     def stream_for(self, key: ModelKey, program=None, stream=None):
-        """The variant's CommandStream (lowered once, then cached)."""
+        """The variant's CommandStream (lowered once, then cached).
+
+        With ``REPRO_VERIFY`` set, a stream entering the admission cache is
+        first hazard-checked and cycle-reconciled against this scheduler's
+        own controller (:mod:`repro.analysis.verify_stream`) — admission
+        books per-hart cycles from ``simulate``, so a stream whose
+        accounting does not reconcile would corrupt the booking clock."""
+        from repro import analysis
         with self._lock:
             cs = self._streams.get(key)
             if cs is None:
@@ -152,6 +161,11 @@ class SlotScheduler:
                     cs = program.to_command_stream(mode=self.mode)
                 else:
                     return None
+                if analysis.verify_enabled():
+                    analysis.count("stream_admission")
+                    from repro.analysis.verify_stream import verify_stream
+                    verify_stream(cs, controller=self.controller,
+                                  blame=f"admission of {key}")
                 self._streams[key] = cs
             return cs
 
@@ -163,7 +177,7 @@ class SlotScheduler:
             cycle_scale=max(1, batch))
 
     def _commit(self, bank: int, rep, cs, batch: int,
-                label: str = "") -> Tuple[int, int]:
+                label: str = "") -> Tuple[int, int]:  # requires: _lock
         started = [s for s, j in zip(rep.per_job_start, cs.jobs)
                    if j.mvu >= 0]
         start = min(started, default=rep.makespan_cycles)

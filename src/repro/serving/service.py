@@ -133,18 +133,18 @@ class InferenceService:
         self.straggler = straggler or StragglerDetector(window=64)
         self.backend = backend
         self.interpret = interpret
-        self._runners: Dict[ModelKey, executor.BucketedRunner] = {}
+        self._runners: Dict[ModelKey, executor.BucketedRunner] = {}  # guarded-by: _mlock
         self._thread: Optional[threading.Thread] = None
         self._pool: Optional[ThreadPoolExecutor] = None
         self._stop = threading.Event()
         self._pend_lock = threading.Condition()
-        self._pending = 0
-        self._batch_seq = 0
+        self._pending = 0    # guarded-by: _pend_lock
+        self._batch_seq = 0  # guarded-by: _mlock
         # guards everything metrics() reads while the worker writes it
         # (latency deque, runner dict, straggler window, counters — with a
         # finalize pool several completions may land concurrently)
         self._mlock = threading.Lock()
-        self._latencies = collections.deque(maxlen=4096)
+        self._latencies = collections.deque(maxlen=4096)  # guarded-by: _mlock
         self.max_retries = max_retries
         m = self.metrics_registry
         self._c_completed = m.counter("service_completed_total",

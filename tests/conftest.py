@@ -14,6 +14,11 @@ import pytest
 
 sys.path.insert(0, os.path.dirname(__file__))
 
+# default-on static verification (repro.analysis): every compile and every
+# emitted command stream in the suite runs the verifier sandwich. Export
+# REPRO_VERIFY=0 to measure the bare paths.
+os.environ.setdefault("REPRO_VERIFY", "1")
+
 try:
     import hypothesis  # noqa: F401
 except ImportError:
